@@ -1,0 +1,61 @@
+"""Roofline table from dry-run artifacts (deliverable g).
+
+Reads ``benchmarks/artifacts/dryrun/*.json`` (produced by
+``python -m repro.launch.dryrun --all --both-meshes``) and emits one CSV row
+per (arch x shape x mesh) cell with the three roofline terms, the dominant
+bottleneck and the useful-flops fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROWS = []
+ARTIFACT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts", "dryrun")
+
+
+def emit(name, us, derived=""):
+    line = f"{name},{us:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def run_all(artifact_dir: str = ARTIFACT_DIR):
+    files = sorted(glob.glob(os.path.join(artifact_dir, "*.json")))
+    if not files:
+        emit("dryrun/NO-ARTIFACTS", 0.0, "run python -m repro.launch.dryrun --all --both-meshes")
+        return ROWS
+    for f in files:
+        r = json.load(open(f))
+        rl = r["roofline"]
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        useful = rl.get("useful_fraction")
+        # Perf-variant artifacts carry a filename tag after the mesh.
+        stem = os.path.basename(f)[: -len(".json")]
+        variant = stem.split(r["mesh"], 1)[-1] or ""
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{variant}",
+            dom * 1e6,
+            f"bottleneck={rl['bottleneck']};compute_s={rl['compute_s']:.3e};"
+            f"memory_s={rl['memory_s']:.3e};collective_s={rl['collective_s']:.3e};"
+            f"useful_frac={useful:.3f};fits16gb={r.get('fits_16gb')}",
+        )
+    # The paper-scale k-core dry-runs (launch/kcore_dryrun.py artifacts).
+    kdir = os.path.join(os.path.dirname(artifact_dir.rstrip("/")), "kcore")
+    for f in sorted(glob.glob(os.path.join(kdir, "*.json"))):
+        r = json.load(open(f))
+        rl = r.get("roofline")
+        if rl is None:
+            emit(f"kcore-roofline/{r['case']}/{r['mesh']}", 0.0,
+                 f"INFEASIBLE:{r.get('skipped_compile','')}")
+            continue
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        emit(
+            f"kcore-roofline/{r['case']}/{r['mesh']}",
+            dom * 1e6,
+            f"bottleneck={rl['bottleneck']};compute_s={rl['compute_s']:.3e};"
+            f"memory_s={rl['memory_s']:.3e};collective_s={rl['collective_s']:.3e};"
+            f"fits16gb={r.get('fits_16gb')}",
+        )
+    return ROWS

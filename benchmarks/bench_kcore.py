@@ -1,0 +1,135 @@
+"""DC-kCore benchmarks — one function per paper table/figure.
+
+The paper's graphs (com-friendster 1.8B edges, WX-15B, WX-136B) do not fit
+this container; each benchmark uses *shape-matched* synthetic graphs
+(R-MAT power-law = payment-network analog, BA = social-network analog)
+scaled to CPU budget. The metrics mirror the paper's:
+
+  Table 3  end-to-end time: Spark-kCore analog (Jacobi, frozen reads) vs
+           PSGraph analog (monolithic in-place) vs DC-kCore (rough divide)
+  Fig 7    per-part decomposition time
+  Fig 8    per-part communication amount (changed-estimate count)
+  Fig 9    Rough- vs Exact-Divide extraction time
+  Fig 10   total communication vs number of parts (2-4)
+  Fig 11   preprocessing cost vs number of parts
+  §5.2     correctness: every engine == BZ peeling oracle
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.decompose import decompose
+from repro.core.dckcore import dc_kcore
+from repro.graph.build import bucketize
+from repro.graph.generators import barabasi_albert, rmat
+from repro.graph.oracle import peel_coreness
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def _graphs():
+    """(name, graph, divide_threshold): scaled analogs of the paper's three.
+
+    Divide thresholds sit near the 80th coreness percentile of each graph —
+    the regime the paper targets (a dense top part vs a large sparse rest).
+    A pure BA graph is deliberately NOT used as the social analog: BA
+    coreness is ~constant (= m), which makes any division degenerate."""
+    return [
+        ("cf-analog(rmat13d)", rmat(13, 24, a=0.5, b=0.2, c=0.2, seed=1), 40),
+        ("wx15-analog(rmat14)", rmat(14, 12, seed=2), 16),
+        ("wx136-analog(rmat15)", rmat(15, 16, seed=3), 24),
+    ]
+
+
+def correctness():
+    """Paper §5.2: results of all engines are completely consistent."""
+    for name, g, t in _graphs()[:2]:
+        oracle = peel_coreness(g)
+        mono = decompose(bucketize(g)).coreness
+        div, _ = dc_kcore(g, thresholds=(t,), strategy="rough")
+        ok = (mono == oracle).all() and (div == oracle).all()
+        emit(f"correctness/{name}", 0.0, f"consistent={bool(ok)}")
+        assert ok
+
+
+def table3_end_to_end():
+    for name, g, t in _graphs():
+        t0 = time.time()
+        res = decompose(bucketize(g), gauss_seidel=False)
+        spark_s = time.time() - t0
+
+        t0 = time.time()
+        res_ps = decompose(bucketize(g))
+        ps_s = time.time() - t0
+
+        t0 = time.time()
+        _, rep = dc_kcore(g, thresholds=(t,), strategy="rough")
+        dc_s = time.time() - t0
+        emit(f"table3/{name}/spark-analog", spark_s * 1e6, f"iters={res.iterations}")
+        emit(f"table3/{name}/psgraph-analog", ps_s * 1e6, f"iters={res_ps.iterations}")
+        emit(f"table3/{name}/dc-kcore", dc_s * 1e6,
+             f"speedup_vs_ps={ps_s / dc_s:.2f}x;peak_bytes_ratio="
+             f"{rep.peak_bytes / res_ps.peak_bytes:.2f}")
+
+
+def fig7_part_times():
+    name, g, t = _graphs()[1]
+    _, rep = dc_kcore(g, thresholds=(t,), strategy="rough")
+    for p in rep.parts:
+        emit(f"fig7/{name}/part[{p.name}]", p.decompose_time_s * 1e6,
+             f"iters={p.iterations};n={p.n_nodes};m={p.n_edges}")
+
+
+def fig8_comm_amount():
+    for name, g, t in _graphs()[:2]:
+        mono = decompose(bucketize(g))
+        _, rep = dc_kcore(g, thresholds=(t,), strategy="rough")
+        emit(f"fig8/{name}/monolithic", 0.0, f"comm={mono.comm_amount}")
+        for p in rep.parts:
+            emit(f"fig8/{name}/part[{p.name}]", 0.0, f"comm={p.comm_amount}")
+        emit(f"fig8/{name}/dc-total", 0.0,
+             f"comm={rep.total_comm};reduction={1 - rep.total_comm / max(mono.comm_amount,1):.2%}")
+
+
+def fig9_divide_strategies():
+    from repro.core.divide import timed_candidates
+
+    for name, g, t in _graphs():
+        ext = np.zeros(g.n_nodes, dtype=np.int32)
+        _, rough_s = timed_candidates(g, ext, t, "rough")
+        _, exact_s = timed_candidates(g, ext, t, "exact")
+        emit(f"fig9/{name}+{t}/rough", rough_s * 1e6, "")
+        emit(f"fig9/{name}+{t}/exact", exact_s * 1e6,
+             f"rough_speedup={exact_s / max(rough_s, 1e-9):.1f}x")
+
+
+def fig10_fig11_parts():
+    name, g, _ = _graphs()[1]
+    deg = g.degrees
+    qs = {2: [16], 3: [8, 32], 4: [8, 16, 48]}
+    mono = decompose(bucketize(g))
+    emit(f"fig10/{name}/psgraph-analog", 0.0, f"comm={mono.comm_amount}")
+    for n_parts, thresholds in qs.items():
+        _, rep = dc_kcore(g, thresholds=thresholds, strategy="rough")
+        emit(f"fig10/{name}/parts={n_parts}", 0.0, f"comm={rep.total_comm}")
+        emit(f"fig11/{name}/parts={n_parts}", rep.preprocess_time_s * 1e6,
+             f"peak_bytes={rep.peak_bytes}")
+
+
+def run_all():
+    correctness()
+    table3_end_to_end()
+    fig7_part_times()
+    fig8_comm_amount()
+    fig9_divide_strategies()
+    fig10_fig11_parts()
+    return ROWS

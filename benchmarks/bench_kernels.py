@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: hindex operator variants on one bucket tile.
+
+NOTE: the Pallas kernel runs in interpret mode on this container (Python
+per-block execution) — its wall time here is NOT indicative of TPU time;
+the jnp variants are the CPU-comparable rows. Validation (kernel == ref)
+is in tests/test_kernels_hindex.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hindex import hindex_count, hindex_sorted
+from repro.kernels.hindex import hindex_op
+
+ROWS = []
+
+
+def emit(name, us, derived=""):
+    line = f"{name},{us:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run_all():
+    rng = np.random.default_rng(0)
+    for (n, w) in [(1024, 64), (4096, 128)]:
+        x = jnp.asarray(rng.integers(-1, w, size=(n, w)).astype(np.int32))
+        ext = jnp.zeros((n,), jnp.int32)
+        cur = jnp.full((n,), w, jnp.int32)
+        cand = min(w, 64)
+
+        f_sorted = jax.jit(hindex_sorted)
+        f_count = jax.jit(lambda a, b: hindex_count(a, b, cand_chunk=cand))
+        emit(f"hindex/jnp-sorted/{n}x{w}", _bench(f_sorted, x, ext))
+        emit(f"hindex/jnp-count/{n}x{w}", _bench(f_count, x, ext))
+        t0 = time.time()
+        hindex_op(x, ext, cur, cand=cand).block_until_ready()
+        emit(f"hindex/pallas-interpret/{n}x{w}", (time.time() - t0) * 1e6,
+             "interpret-mode;not-TPU-indicative")
+    return ROWS

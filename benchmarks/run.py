@@ -1,0 +1,33 @@
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (bench_kcore), kernel microbenches
+(bench_kernels) and the dry-run roofline table (bench_dryrun).
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["kcore", "kernels", "dryrun"], default=None)
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    if args.only in (None, "kcore"):
+        from benchmarks import bench_kcore
+
+        bench_kcore.run_all()
+    if args.only in (None, "kernels"):
+        from benchmarks import bench_kernels
+
+        bench_kernels.run_all()
+    if args.only in (None, "dryrun"):
+        from benchmarks import bench_dryrun
+
+        bench_dryrun.run_all()
+
+
+if __name__ == "__main__":
+    main()

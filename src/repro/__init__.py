@@ -1,0 +1,8 @@
+"""DC-kCore on JAX/TPU.
+
+Reproduction + beyond-paper optimization of "K-Core Decomposition on Super
+Large Graphs with Limited Resources" (Gao et al., SAC '22) as a
+production-grade multi-pod JAX framework. See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

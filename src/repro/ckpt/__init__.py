@@ -1,0 +1,8 @@
+from repro.ckpt.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+__all__ = ["save_pytree", "restore_pytree", "latest_step", "CheckpointManager"]

@@ -1,0 +1,37 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, 8 experts top-2. [hf:xai-org/grok-1; unverified]
+
+314B params / 256 v5e chips: Adafactor (factored second moment) + full
+remat keep the training state inside 16 GB/chip (see EXPERIMENTS.md)."""
+import dataclasses
+import jax.numpy as jnp
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131_072,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=32768, every_k_layers=1),
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    max_seq_len=8_192,
+    optimizer="adafactor",
+    remat="full",
+    param_dtype=jnp.bfloat16,  # 16 GB/chip: bf16 params + factored optimizer
+)
+
+
+def smoke_config() -> ModelConfig:
+    import jax.numpy as jnp
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512, max_seq_len=128, dtype=jnp.float32,
+        remat="none",
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=128, every_k_layers=1),
+    )

@@ -1,0 +1,27 @@
+"""DC-kCore: divide-and-conquer distributed k-core decomposition (the
+paper's contribution) on JAX.
+
+Public API:
+
+* :func:`repro.core.dckcore.dc_kcore` — the divide/conquer/merge pipeline.
+* :func:`repro.core.decompose.decompose` — single-device conquer engine.
+* :mod:`repro.core.distributed` — multi-device shard_map conquer engine.
+* :mod:`repro.core.hindex` — paper Algorithms 1 & 2, vectorized.
+* :func:`repro.core.divide.plan_thresholds` — resource-driven divide planner.
+"""
+from repro.core.dckcore import DCKCoreReport, PartReport, dc_kcore
+from repro.core.decompose import DecomposeResult, decompose
+from repro.core.divide import plan_thresholds
+from repro.core.hindex import hindex_brute, hindex_count, hindex_sorted
+
+__all__ = [
+    "dc_kcore",
+    "DCKCoreReport",
+    "PartReport",
+    "decompose",
+    "DecomposeResult",
+    "plan_thresholds",
+    "hindex_sorted",
+    "hindex_count",
+    "hindex_brute",
+]

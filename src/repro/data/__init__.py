@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticTokens
+from repro.data.loader import MemmapTokens, Prefetcher
+
+__all__ = ["SyntheticTokens", "MemmapTokens", "Prefetcher"]

@@ -1,0 +1,24 @@
+"""Graph substrate: containers, generators, oracles and IO.
+
+Host-side graphs are numpy CSR (``Graph``); device-side graphs are
+degree-bucketed padded adjacency tiles (``BucketedGraph``) built by
+:mod:`repro.graph.build` for MXU/VPU-friendly dense compute.
+"""
+from repro.graph.structs import Graph, BucketedGraph, Bucket
+from repro.graph.build import bucketize, induced_subgraph, external_info
+from repro.graph.generators import erdos_renyi, barabasi_albert, rmat
+from repro.graph.oracle import peel_coreness, nx_coreness
+
+__all__ = [
+    "Graph",
+    "BucketedGraph",
+    "Bucket",
+    "bucketize",
+    "induced_subgraph",
+    "external_info",
+    "erdos_renyi",
+    "barabasi_albert",
+    "rmat",
+    "peel_coreness",
+    "nx_coreness",
+]

@@ -1,0 +1,127 @@
+"""Builders: bucketing, induced subgraphs and external information.
+
+These are the host-side preprocessing steps of DC-kCore:
+
+* :func:`induced_subgraph` implements the divide step's subgraph extraction
+  (with old->new relabeling), for both Exact- and Rough-Divide.
+* :func:`external_info` implements Definition 3 of the paper:
+  ``E(v) = |N_G(v) ∩ V_upper|`` for every surviving node ``v``.
+* :func:`bucketize` converts a CSR part into the TPU-friendly
+  degree-bucketed padded representation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.graph.structs import Bucket, BucketedGraph, Graph
+
+# Bucket pad widths: powers of two. Smallest kept modest so tiny-degree nodes
+# don't blow up the padded footprint; largest grows to cover any max degree.
+_MIN_WIDTH = 8
+
+
+def _bucket_widths(max_deg: int) -> Sequence[int]:
+    widths = []
+    w = _MIN_WIDTH
+    while True:
+        widths.append(w)
+        if w >= max_deg:
+            break
+        w *= 2
+    return widths
+
+
+def induced_subgraph(g: Graph, keep_mask: np.ndarray) -> Tuple[Graph, np.ndarray]:
+    """Induced subgraph on ``keep_mask`` with relabeled ids.
+
+    Returns ``(subgraph, node_ids)`` where ``node_ids[new_id] = old_id``.
+    """
+    keep_mask = np.asarray(keep_mask, dtype=bool)
+    if keep_mask.shape != (g.n_nodes,):
+        raise ValueError("mask shape mismatch")
+    node_ids = np.nonzero(keep_mask)[0].astype(np.int64)
+    new_id = np.full(g.n_nodes, -1, dtype=np.int64)
+    new_id[node_ids] = np.arange(node_ids.shape[0], dtype=np.int64)
+
+    deg = g.degrees
+    # Row lengths of surviving rows; then filter columns by mask.
+    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), deg)
+    keep_edge = keep_mask[src] & keep_mask[g.indices]
+    sub_src = new_id[src[keep_edge]]
+    sub_dst = new_id[g.indices[keep_edge]]
+
+    n_sub = node_ids.shape[0]
+    counts = np.bincount(sub_src, minlength=n_sub)
+    indptr = np.zeros(n_sub + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    # Edges are emitted in (src-sorted, dst-sorted) order already because the
+    # parent CSR is sorted and relabeling is monotone.
+    sub = Graph(indptr=indptr, indices=sub_dst.astype(np.int32), n_nodes=int(n_sub))
+    return sub, node_ids
+
+
+def external_info(g: Graph, keep_mask: np.ndarray, upper_mask: np.ndarray) -> np.ndarray:
+    """E(v) = number of neighbors of ``v`` inside ``upper_mask``.
+
+    Returned per *surviving* node (``keep_mask`` order, relabeled ids).
+    ``upper_mask`` marks nodes whose coreness is already finalized at a value
+    >= the part's threshold (Definition 3).
+    """
+    keep_mask = np.asarray(keep_mask, dtype=bool)
+    upper_mask = np.asarray(upper_mask, dtype=bool)
+    deg = g.degrees
+    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), deg)
+    contributes = keep_mask[src] & upper_mask[g.indices]
+    ext_full = np.bincount(src[contributes], minlength=g.n_nodes)
+    return ext_full[keep_mask].astype(np.int32)
+
+
+def bucketize(
+    g: Graph,
+    ext: Optional[np.ndarray] = None,
+    row_align: int = 8,
+) -> BucketedGraph:
+    """Convert a CSR part into degree-bucketed padded dense tiles.
+
+    Nodes of degree 0 are excluded from every bucket: their coreness is
+    exactly ``ext`` at initialization and never changes. Bucket rows are
+    padded to a multiple of ``row_align`` (sublane alignment; the distributed
+    engine re-pads rows to a multiple of the node-shard count).
+    """
+    deg = g.degrees
+    n = g.n_nodes
+    if ext is None:
+        ext = np.zeros(n, dtype=np.int32)
+    ext = np.asarray(ext, dtype=np.int32)
+    if ext.shape != (n,):
+        raise ValueError("ext shape mismatch")
+
+    buckets = []
+    max_deg = int(deg.max(initial=0))
+    if max_deg > 0:
+        for lo_excl_idx, width in enumerate(_bucket_widths(max_deg)):
+            lo = 0 if lo_excl_idx == 0 else width // 2
+            members = np.nonzero((deg > lo) & (deg <= width))[0]
+            if members.size == 0:
+                continue
+            nb = int(np.ceil(members.size / row_align) * row_align)
+            # Padded rows scatter into the sentinel slot `n` of the state
+            # vector (re-pinned to -1 after each update), never into a node.
+            node_ids = np.full(nb, n, dtype=np.int32)
+            node_ids[: members.size] = members
+            neigh = np.full((nb, width), n, dtype=np.int32)  # sentinel pad
+            row_deg = np.zeros(nb, dtype=np.int32)
+            row_deg[: members.size] = deg[members]
+            # Fill rows: gather each member's adjacency slice.
+            starts = g.indptr[members]
+            lens = deg[members]
+            flat_idx = (starts[:, None] + np.arange(width)[None, :]).astype(np.int64)
+            valid = np.arange(width)[None, :] < lens[:, None]
+            flat_idx = np.where(valid, flat_idx, 0)
+            vals = g.indices[flat_idx]
+            neigh[: members.size] = np.where(valid, vals, n)
+            buckets.append(Bucket(node_ids=node_ids, neigh=neigh, deg=row_deg, width=width))
+
+    return BucketedGraph(n_nodes=n, buckets=buckets, ext=ext, degrees=deg.astype(np.int32))

@@ -1,0 +1,45 @@
+"""Graph IO: npz snapshots and SNAP-style edge-list text files.
+
+``load_edgelist`` accepts the com-friendster format (``u<TAB>v`` per line,
+``#`` comments), so the paper's public dataset drops in directly when
+present on disk.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.graph.structs import Graph
+
+
+def save_npz(path: str, g: Graph) -> None:
+    tmp = path + ".tmp.npz"
+    np.savez_compressed(tmp, indptr=g.indptr, indices=g.indices, n_nodes=g.n_nodes)
+    os.replace(tmp, path)
+
+
+def load_npz(path: str) -> Graph:
+    z = np.load(path)
+    return Graph(indptr=z["indptr"], indices=z["indices"], n_nodes=int(z["n_nodes"]))
+
+
+def load_edgelist(path: str, n_nodes: int | None = None) -> Graph:
+    """Load a whitespace-separated edge list (SNAP format)."""
+    src, dst = [], []
+    with open(path) as f:
+        for line in f:
+            if line.startswith("#") or not line.strip():
+                continue
+            a, b = line.split()[:2]
+            src.append(int(a))
+            dst.append(int(b))
+    return Graph.from_edges(np.array(src, dtype=np.int64), np.array(dst, dtype=np.int64), n_nodes)
+
+
+def save_edgelist(path: str, g: Graph) -> None:
+    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), g.degrees)
+    mask = src < g.indices  # each undirected edge once
+    with open(path, "w") as f:
+        for u, v in zip(src[mask], g.indices[mask]):
+            f.write(f"{u}\t{v}\n")

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots of DC-kCore.
+
+The paper's per-iteration hot-spot is the h-index estimation over every
+node's gathered neighbor estimates (Algorithms 1/2):
+
+* ``hindex/`` — the fused single-device form: blocked sort-free
+  compare-and-reduce straight to the new estimates.
+* ``counts/`` — the distributed form: per-shard partial suffix counts
+  (the psum payload of core/distributed.py), tiled over candidates so the
+  VMEM footprint is width-independent.
+
+Both validated in interpret mode on CPU against pure-jnp oracles
+(tests/test_kernels_*.py); target: TPU v5e.
+"""

@@ -1,0 +1,5 @@
+from repro.kernels.counts.counts import partial_counts_pallas
+from repro.kernels.counts.ops import partial_counts_op
+from repro.kernels.counts.ref import partial_counts_ref
+
+__all__ = ["partial_counts_pallas", "partial_counts_op", "partial_counts_ref"]

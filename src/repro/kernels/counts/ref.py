@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the partial-counts kernel.
+
+Semantics: per node row, the suffix count over the LOCAL neighbor-slot
+shard for every candidate offset:
+
+    cnt[n, i] = #{ j : x[n, j] >= ext[n] + (i+1) },  i in [0, cand)
+
+This is the distributed conquer step's per-shard contribution; the engine
+psums it over the slot ("model") axes before the feasibility argmax
+(see core/distributed.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def partial_counts_ref(x: jax.Array, ext: jax.Array, cand: int) -> jax.Array:
+    """x: [n, w_local] int32 (-1 padded); ext: [n] int32 -> [n, cand] int32."""
+    i = 1 + jnp.arange(cand, dtype=jnp.int32)
+    thr = ext[:, None] + i[None, :]
+    return (x[:, :, None] >= thr[:, None, :]).sum(axis=1).astype(jnp.int32)

@@ -1,0 +1,5 @@
+from repro.kernels.hindex.hindex import hindex_pallas
+from repro.kernels.hindex.ops import hindex_op
+from repro.kernels.hindex.ref import hindex_ref
+
+__all__ = ["hindex_pallas", "hindex_op", "hindex_ref"]

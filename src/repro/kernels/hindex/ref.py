@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the hindex Pallas kernel.
+
+Semantics (paper Algorithm 2, suffix-count form): given gathered neighbor
+estimates ``x[n, j]`` (padded slots = -1) and external information
+``ext[n]``, return
+
+    out[n] = ext[n] + max{ i in [1, cand] : #{j : x[n, j] >= ext[n] + i} >= i }
+
+(0 if no i is feasible). ``cand`` is the candidate window; with
+``cand >= max degree`` this is exactly Algorithm 2. The engines pass the
+degeneracy bound U (h-index of the degree sequence, >= k_max), which
+preserves exactness while shrinking the window — see DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hindex_ref(x: jax.Array, ext: jax.Array, cand: int) -> jax.Array:
+    """Oracle. x: [n, w] int32 (-1 padded), ext: [n] int32 -> [n] int32."""
+    n, w = x.shape
+    cand = int(min(cand, w))
+    i = 1 + jnp.arange(cand, dtype=jnp.int32)  # [cand]
+    thr = ext[:, None] + i[None, :]  # [n, cand]
+    cnt = (x[:, :, None] >= thr[:, None, :]).sum(axis=1)  # [n, cand]
+    feasible = cnt >= i[None, :]
+    best = jnp.max(jnp.where(feasible, i[None, :], 0), axis=1)
+    return (ext + best).astype(jnp.int32)

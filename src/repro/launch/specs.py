@@ -1,0 +1,160 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins for every model input.
+
+Everything here is shape/sharding metadata only — no device allocation, so
+the 314B/398B configs cost nothing to describe. Sharding resolution goes
+through :mod:`repro.sharding.policy` with per-arch/per-shape rule variants
+(long-context decode shards the cache sequence dim over "data").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.models import blocks
+from repro.models.model import build_specs
+from repro.models.module import abstract_params
+from repro.optim import get_optimizer
+from repro.sharding.policy import (
+    DEFAULT_RULES,
+    LONG_DECODE_RULES,
+    ResolveLog,
+    resolve_spec,
+)
+
+
+def rules_for(cfg, shape_name: str, overrides: Optional[dict] = None) -> dict:
+    rules = dict(LONG_DECODE_RULES if shape_name == "long_500k" else DEFAULT_RULES)
+    rules.update(dict(cfg.sharding_overrides))
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _batch_spec(mesh, rules, batch: int) -> P:
+    """Batch-dim spec; drops axes the batch size cannot be divided over
+    (long_500k has global_batch=1 — batch stays replicated and the cache
+    sequence dim carries the sharding instead, per LONG_DECODE_RULES)."""
+    axes = []
+    prod = 1
+    for a in rules.get("batch") or ():
+        if a in mesh.shape and batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return P(tuple(axes) if axes else None)
+
+
+def extras_specs(cfg, batch: int, mesh, rules) -> Dict[str, Any]:
+    bspec = _batch_spec(mesh, rules, batch)
+    ex: Dict[str, Any] = {}
+    if cfg.encoder is not None:
+        ex["frames"] = _sds(
+            (batch, cfg.encoder.n_frames, cfg.d_model), cfg.dtype, mesh,
+            P(*bspec, None, None),
+        )
+    elif cfg.cross_attn_every is not None:
+        ex["vision_embeds"] = _sds(
+            (batch, cfg.n_vision_tokens, cfg.d_model), cfg.dtype, mesh,
+            P(*bspec, None, None),
+        )
+    return ex
+
+
+def _cache_abstract(cfg, batch: int, max_len: int, mesh, rules, log=None):
+    tree = blocks.cache_specs_tree(cfg, batch, max_len)
+    is_sd = lambda x: isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(
+            sd[0], sd[2],
+            sharding=resolve_spec(sd[0], sd[1], mesh, rules, log),
+        ),
+        tree,
+        is_leaf=is_sd,
+    )
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh,
+                rules: Optional[dict] = None,
+                lr: float = 3e-4) -> Tuple[Dict[str, Any], Any, ResolveLog]:
+    """Returns (kwargs_specs, cfg, resolve_log) for the shape's step fn.
+
+    kwargs keys per kind:
+      train   -> params, opt_state, step, batch{tokens, labels, extras}
+      prefill -> params, tokens, extras
+      decode  -> params, caches, token, position, extras
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = rules or rules_for(cfg, shape_name)
+    log = ResolveLog()
+
+    params = abstract_params(build_specs(cfg), mesh, rules, log)
+    gb, seq = shape.global_batch, shape.seq_len
+    bspec = _batch_spec(mesh, rules, gb)
+    specs: Dict[str, Any] = {"params": params}
+
+    if shape.kind == "train":
+        opt = get_optimizer(cfg, lr=lr)
+        specs["opt_state"] = jax.eval_shape(opt.init, params)
+        # Optimizer state inherits parameter shardings (ZeRO-1).
+        specs["opt_state"] = _reshard_like(specs["opt_state"], params, mesh)
+        specs["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+        specs["batch"] = {
+            "tokens": _sds((gb, seq), jnp.int32, mesh, P(*bspec, None)),
+            "labels": _sds((gb, seq), jnp.int32, mesh, P(*bspec, None)),
+        }
+        ex = extras_specs(cfg, gb, mesh, rules)
+        if ex:
+            specs["batch"]["extras"] = ex
+    elif shape.kind == "prefill":
+        specs["tokens"] = _sds((gb, seq), jnp.int32, mesh, P(*bspec, None))
+        specs["extras"] = extras_specs(cfg, gb, mesh, rules)
+    else:  # decode
+        specs["caches"] = _cache_abstract(cfg, gb, seq, mesh, rules, log)
+        specs["token"] = _sds((gb, 1), jnp.int32, mesh, P(*bspec, None))
+        specs["position"] = _sds((gb,), jnp.int32, mesh, bspec)
+        specs["extras"] = extras_specs(cfg, gb, mesh, rules)
+    return specs, cfg, log
+
+
+def _reshard_like(opt_state, params, mesh):
+    """Give optimizer-state leaves the sharding of their parameter where
+    shapes match; replicate reduced (factored) leaves."""
+    flat_params = {
+        tuple(str(k) for k in path): leaf
+        for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]
+    }
+
+    def assign(path, leaf):
+        # Match by shape against the parameter with the same trailing path.
+        for ppath, p in flat_params.items():
+            if p.shape == leaf.shape and _suffix_match(path, ppath):
+                return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=p.sharding)
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P())
+        )
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: assign(tuple(str(k) for k in path), leaf), opt_state
+    )
+
+
+def _suffix_match(opt_path, param_path) -> bool:
+    """Optimizer paths look like ('m', <param path...>) or (<param path...>, 'v')."""
+    pp = list(param_path)
+    op = [p for p in opt_path]
+    i, j = 0, 0
+    while i < len(op) and j < len(pp):
+        if op[i] == pp[j]:
+            i += 1
+            j += 1
+        else:
+            i += 1
+    return j == len(pp)

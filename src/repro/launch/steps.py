@@ -1,0 +1,42 @@
+"""Step functions per shape kind, ready for jit + lower."""
+from __future__ import annotations
+
+import dataclasses
+from repro.models.model import decode_step, prefill
+from repro.optim import get_optimizer
+from repro.runtime.train_loop import make_train_step
+
+
+def step_fn_for(cfg, kind: str, lr: float = 3e-4, accum_steps: int = 1,
+                grad_shardings=None, accum_dtype=None):
+    """Returns (fn, kwargs_order) matching launch.specs.input_specs."""
+    if kind == "train":
+        import jax.numpy as jnp
+
+        # Big-model training always remats: saved-activation footprint would
+        # otherwise scale with depth x sequence (see EXPERIMENTS.md memory
+        # table). Configs may still pin an explicit policy.
+        if cfg.remat == "none":
+            cfg = dataclasses.replace(cfg, remat="full")
+        optimizer = get_optimizer(cfg, lr=lr)
+        fn = make_train_step(
+            cfg, optimizer, accum_steps=accum_steps,
+            grad_shardings=grad_shardings,
+            accum_dtype=accum_dtype or jnp.float32,
+        )
+
+        def train_fn(params, opt_state, step, batch):
+            return fn(params, opt_state, step, batch)
+
+        return train_fn, ("params", "opt_state", "step", "batch")
+    if kind == "prefill":
+        def prefill_fn(params, tokens, extras):
+            return prefill(params, tokens, cfg, extras=extras or None)
+
+        return prefill_fn, ("params", "tokens", "extras")
+    if kind == "decode":
+        def serve_fn(params, caches, token, position, extras):
+            return decode_step(params, caches, token, position, cfg, extras=extras or None)
+
+        return serve_fn, ("params", "caches", "token", "position", "extras")
+    raise ValueError(kind)

@@ -1,0 +1,56 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real training on whatever devices exist (CPU here; TPU pods on the
+target). ``--smoke`` selects the reduced config; the FULL configs are meant
+for the production meshes (exercised via the dry-run on this container).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticTokens
+from repro.models.model import build_specs
+from repro.models.module import count_params, init_params
+from repro.optim import get_optimizer
+from repro.runtime import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    specs = build_specs(cfg)
+    print(f"{cfg.name}: {count_params(specs)/1e6:.1f}M params, "
+          f"{len(jax.devices())} device(s)")
+    params = init_params(specs, jax.random.PRNGKey(args.seed))
+    data = SyntheticTokens(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch=args.batch, seed=args.seed
+    )
+    loop = TrainLoop(
+        cfg=cfg, params=params,
+        optimizer=get_optimizer(cfg, lr=args.lr, total=args.steps),
+        data=data, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    if args.resume and loop.try_resume():
+        print(f"resumed from step {loop.step}")
+    hist = loop.run(args.steps, log_every=max(1, args.steps // 20))
+    for s, l, t in zip(hist["step"], hist["loss"], hist["tokens_per_s"]):
+        print(f"step {s:6d}  loss {l:8.4f}  {t:9.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""Attention: GQA, qk-norm, RoPE, sliding window, cross-attention, KV cache.
+
+One implementation serves every assigned architecture:
+
+* GQA with arbitrary ``n_kv_heads`` (projection weights stay flat 2-D so the
+  model axis shards them even when head counts are not divisible by it).
+* ``chunked`` full-sequence path: online-softmax over KV chunks (the
+  flash-attention recurrence in pure JAX) — bounds activation memory at
+  32k/500k sequence lengths.
+* Sliding-window layers keep a ring-buffer cache of ``window`` slots with an
+  explicit per-slot position array, so local layers cost O(window) HBM at
+  decode regardless of sequence length (what makes gemma3 long_500k viable).
+* Cross-attention (vlm/enc-dec) reuses the same machinery without RoPE or
+  causal masking; its KV is computed once and cached at prefill.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from repro.models.layers import apply_rope, rmsnorm, with_logical
+from repro.models.module import ParamSpec
+
+NEG_INF = -2.0e38
+
+
+# --------------------------------------------------------------------- #
+# Specs
+# --------------------------------------------------------------------- #
+def attention_specs(cfg, cross: bool = False) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pd = cfg.param_dtype
+    specs = {
+        "wq": ParamSpec((d, hq * dh), ("embed", "heads"), dtype=pd),
+        "wk": ParamSpec((d, hkv * dh), ("embed", "kv_heads"), dtype=pd),
+        "wv": ParamSpec((d, hkv * dh), ("embed", "kv_heads"), dtype=pd),
+        "wo": ParamSpec((hq * dh, d), ("heads", "embed"), dtype=pd),
+    }
+    if cfg.qk_norm and not cross:
+        specs["qnorm"] = {"scale": ParamSpec((dh,), (None,), init="ones")}
+        specs["knorm"] = {"scale": ParamSpec((dh,), (None,), init="ones")}
+    return specs
+
+
+def _project_q(params, x, cfg):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(cfg.dtype))
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    if "qnorm" in params:
+        q = rmsnorm(params["qnorm"], q, cfg.norm_eps)
+    return q
+
+
+def _project_kv(params, x, cfg):
+    b, s, _ = x.shape
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(cfg.dtype))
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if "knorm" in params:
+        k = rmsnorm(params["knorm"], k, cfg.norm_eps)
+    return k, v
+
+
+def _out_proj(params, ctx, cfg):
+    b, s = ctx.shape[:2]
+    # NB: constraining the flat head dim of ctx to the wo "heads" sharding
+    # here was tried (to psum outputs instead of gathering wo at decode) and
+    # REFUTED: it forces worse resharding upstream of the cache-sharded
+    # attention (16.3G vs 2.3G of all-gather) — see EXPERIMENTS.md §Perf.
+    out = jnp.einsum("bsh,hd->bsd", ctx.reshape(b, s, -1), params["wo"].astype(cfg.dtype))
+    return with_logical(out, ("batch", None, None))
+
+
+# --------------------------------------------------------------------- #
+# Full-sequence attention (train / prefill)
+# --------------------------------------------------------------------- #
+def _mask(q_pos, kv_pos, causal: bool, window: Optional[int]):
+    """[.., S_q, S_kv] bool validity mask from position grids."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    d = q_pos[..., :, None] - kv_pos[..., None, :]
+    if causal:
+        m &= d >= 0
+    if window is not None:
+        m &= d < window
+    return m
+
+
+def _sdpa(q, k, v, mask):
+    """q: [B,Sq,Hkv,G,dh]; k/v: [B,Skv,Hkv,dh]; mask: [B,Sq,Skv] or None."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def _sdpa_chunked(q, k, v, q_pos, kv_pos, causal, window, chunk):
+    """Online-softmax over KV chunks — O(S*chunk) live memory."""
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    n_chunks = skv // chunk
+    k_c = k.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    p_c = kv_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def step(carry, chunk_in):
+        m, l, acc = carry
+        kc, vc, pc = chunk_in
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kc).astype(jnp.float32)
+        s = s / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        msk = _mask(q_pos, pc, causal, window)  # [b, sq, chunk]
+        s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(q.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (k_c, v_c, p_c))
+    ctx = acc / jnp.maximum(l, 1e-30)[..., None]
+    return ctx.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # [b, sq, hkv, g, dh]
+
+
+def attention(
+    params,
+    x,
+    cfg,
+    *,
+    positions,  # [B, S] int32
+    causal: bool = True,
+    window: Optional[int] = None,
+    theta: Optional[float] = None,
+    kv_src=None,  # cross-attention source [B, S_kv, D]
+    kv_positions=None,
+):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    theta = cfg.rope_theta if theta is None else theta
+    q = _project_q(params, x, cfg)
+    src = x if kv_src is None else kv_src
+    k, v = _project_kv(params, src, cfg)
+    if kv_src is None:  # self-attention: RoPE on q and k
+        q = apply_rope(q, positions, theta, cfg.rope_fraction)
+        k = apply_rope(k, positions if kv_positions is None else kv_positions,
+                       theta, cfg.rope_fraction)
+        kv_pos = positions if kv_positions is None else kv_positions
+    else:
+        kv_pos = (
+            kv_positions
+            if kv_positions is not None
+            else jnp.broadcast_to(jnp.arange(src.shape[1], dtype=jnp.int32), (b, src.shape[1]))
+        )
+    qg = q.reshape(b, s, cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim)
+
+    use_chunked = cfg.attention_impl == "chunked" or (
+        cfg.attention_impl == "auto"
+        and src.shape[1] > 2048
+        and src.shape[1] % cfg.attn_chunk == 0
+    )
+    if use_chunked:
+        ctx = _sdpa_chunked(qg, k, v, positions, kv_pos, causal, window, cfg.attn_chunk)
+    else:
+        mask = _mask(positions, kv_pos, causal, window) if (causal or window) else None
+        ctx = _sdpa(qg, k, v, mask)
+    return _out_proj(params, ctx, cfg), (k, v)
+
+
+# --------------------------------------------------------------------- #
+# KV cache + decode step
+# --------------------------------------------------------------------- #
+def init_cache_layer(cfg, batch: int, max_len: int, window: Optional[int], rules=None):
+    """Cache pytree for one attention layer (ring buffer for local layers)."""
+    slots = min(window, max_len) if window is not None else max_len
+    shape = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "slot_pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def cache_layer_specs(cfg, batch: int, max_len: int, window: Optional[int]):
+    """(shape, logical axes) pairs for dry-run input specs."""
+    slots = min(window, max_len) if window is not None else max_len
+    kv = ((batch, slots, cfg.n_kv_heads, cfg.head_dim),
+          ("cache_batch", "cache_seq", "kv_heads", None))
+    return {
+        "k": (kv[0], kv[1], cfg.dtype),
+        "v": (kv[0], kv[1], cfg.dtype),
+        "slot_pos": ((batch, slots), ("cache_batch", "cache_seq"), jnp.int32),
+    }
+
+
+def cache_write(cache, k_new, v_new, positions):
+    """Write S_new entries at their ring slots. positions: [B, S_new]."""
+    slots_total = cache["k"].shape[1]
+    slot = positions % slots_total  # [B, S_new]
+    b_idx = jnp.arange(k_new.shape[0], dtype=jnp.int32)[:, None]
+    k = cache["k"].at[b_idx, slot].set(k_new)
+    v = cache["v"].at[b_idx, slot].set(v_new)
+    sp = cache["slot_pos"].at[b_idx, slot].set(positions)
+    return {"k": k, "v": v, "slot_pos": sp}
+
+
+def attention_decode(
+    params,
+    x,  # [B, 1, D]
+    cache,
+    cfg,
+    *,
+    position,  # [B] int32 current position
+    window: Optional[int] = None,
+    theta: Optional[float] = None,
+    cross: bool = False,
+):
+    """One-token decode against the cache. Returns (out, new_cache)."""
+    b = x.shape[0]
+    theta = cfg.rope_theta if theta is None else theta
+    q = _project_q(params, x, cfg)  # [B, 1, Hq, dh]
+    pos2 = position[:, None]
+    if not cross:
+        q = apply_rope(q, pos2, theta, cfg.rope_fraction)
+        k_new, v_new = _project_kv(params, x, cfg)
+        k_new = apply_rope(k_new, pos2, theta, cfg.rope_fraction)
+        cache = cache_write(cache, k_new, v_new, pos2)
+    qg = q.reshape(b, 1, cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim)
+
+    k, v, slot_pos = cache["k"], cache["v"], cache["slot_pos"]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    valid = slot_pos >= 0
+    if not cross:
+        valid &= slot_pos <= position[:, None]
+        if window is not None:
+            valid &= (position[:, None] - slot_pos) < window
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return _out_proj(params, ctx, cfg), cache

@@ -1,0 +1,135 @@
+"""Basic layers: norms, rotary embeddings, token embedding, sharding helpers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.module import ParamSpec
+
+
+# --------------------------------------------------------------------- #
+# Sharding constraint helper (no-op outside jit/mesh contexts)
+# --------------------------------------------------------------------- #
+def with_sharding(x, spec: Optional[P]):
+    """Apply a logical activation constraint, filtered to the active mesh's
+    axes (see sharding.policy.active_mesh). No-op without an active mesh."""
+    if spec is None:
+        return x
+    from repro.sharding.policy import filter_spec
+
+    actual = filter_spec(spec)
+    if actual is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, actual)
+
+
+def with_logical(x, axes):
+    """Constraint by LOGICAL axis names, resolved against the active mesh
+    with divisibility fallback (see sharding.policy.logical_spec)."""
+    from repro.sharding.policy import logical_spec
+
+    spec = logical_spec(x.shape, axes)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------- #
+# RMSNorm
+# --------------------------------------------------------------------- #
+def rmsnorm_specs(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), (None,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_specs(dim: int) -> dict:
+    return {
+        "scale": ParamSpec((dim,), (None,), init="ones"),
+        "bias": ParamSpec((dim,), (None,), init="zeros"),
+    }
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# Rotary position embedding
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    head_dim = x.shape[-1]
+    inv, rot_dim = rope_frequencies(head_dim, fraction, theta)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B, S, rot/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1)
+
+
+# --------------------------------------------------------------------- #
+# Token embedding / logits head
+# --------------------------------------------------------------------- #
+def embedding_specs(cfg) -> dict:
+    specs = {
+        "tokens": ParamSpec(
+            (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), init="embed",
+            scale=1.0, dtype=cfg.param_dtype,
+        )
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_padded), ("embed", "vocab"), init="small",
+            dtype=cfg.param_dtype,
+        )
+    return specs
+
+
+def embed_tokens(params, tokens, cfg):
+    emb = params["tokens"].astype(cfg.dtype)[tokens]
+    return emb * jnp.asarray(cfg.d_model, cfg.dtype) ** 0.5
+
+
+def logits_head(params, x, cfg):
+    if cfg.tie_embeddings:
+        w = params["tokens"].astype(cfg.dtype)
+        return jnp.einsum("bsd,vd->bsv", x, w)
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cfg.dtype))
+
+
+# --------------------------------------------------------------------- #
+# Learned positional embedding (whisper decoder/encoder)
+# --------------------------------------------------------------------- #
+def learned_pos_specs(n_positions: int, dim: int) -> dict:
+    return {"pos": ParamSpec((n_positions, dim), (None, "embed"), init="small")}
+
+
+def learned_pos(params, positions, dtype):
+    return params["pos"].astype(dtype)[positions]

@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from repro.models.layers import with_logical
+from repro.models.module import ParamSpec
+
+
+def swiglu_specs(d_model: int, d_ff: int, param_dtype) -> dict:
+    return {
+        "wi_gate": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=param_dtype),
+        "wi_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=param_dtype),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype=param_dtype),
+    }
+
+
+def swiglu(params, x, cfg):
+    gate = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(cfg.dtype))
+    up = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(cfg.dtype))
+    h = jax.nn.silu(gate) * up
+    h = with_logical(h, ("batch", None, "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(cfg.dtype))
+    return with_logical(out, ("batch", None, None))
+
+
+def gelu_mlp_specs(d_model: int, d_ff: int, param_dtype) -> dict:
+    return {
+        "wi": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=param_dtype),
+        "bi": ParamSpec((d_ff,), ("mlp",), init="zeros", dtype=param_dtype),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype=param_dtype),
+        "bo": ParamSpec((d_model,), (None,), init="zeros", dtype=param_dtype),
+    }
+
+
+def gelu_mlp(params, x, cfg):
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(cfg.dtype))
+    h = jax.nn.gelu(h + params["bi"].astype(cfg.dtype))
+    h = with_logical(h, ("batch", None, "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(cfg.dtype))
+    return out + params["bo"].astype(cfg.dtype)

@@ -1,0 +1,152 @@
+"""Model assembly: CausalLM / VLM / enc-dec forward, loss, step builders.
+
+``build_specs(cfg)`` gives the full parameter spec tree; ``forward`` /
+``prefill`` / ``decode_step`` are pure functions over (params, inputs).
+The launch layer wraps them with jit + shardings; smoke tests call them
+directly on CPU with real (reduced-config) parameters.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.layers import (
+    embed_tokens,
+    embedding_specs,
+    layernorm,
+    layernorm_specs,
+    learned_pos,
+    learned_pos_specs,
+    logits_head,
+    rmsnorm,
+    rmsnorm_specs,
+)
+
+
+def _norm_specs(cfg):
+    return layernorm_specs(cfg.d_model) if cfg.norm_type == "layer" else rmsnorm_specs(cfg.d_model)
+
+
+def _norm(params, x, cfg):
+    fn = layernorm if cfg.norm_type == "layer" else rmsnorm
+    return fn(params, x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------- #
+# Specs
+# --------------------------------------------------------------------- #
+def build_specs(cfg) -> dict:
+    specs: Dict[str, Any] = {
+        "embed": embedding_specs(cfg),
+        "stack": blocks.stack_specs_tree(cfg),
+        "final_norm": _norm_specs(cfg),
+    }
+    if not cfg.use_rope:
+        specs["pos_dec"] = learned_pos_specs(cfg.max_seq_len, cfg.d_model)
+    if cfg.encoder is not None:
+        enc_cfg = cfg
+        specs["encoder"] = {
+            "stack": blocks.stack_specs_tree(
+                enc_cfg, n_layers=cfg.encoder.n_layers, causal=False,
+                allow_cross=False,
+            ),
+            "final_norm": _norm_specs(cfg),
+            "pos_enc": learned_pos_specs(cfg.encoder.n_frames, cfg.d_model),
+        }
+    return specs
+
+
+# --------------------------------------------------------------------- #
+# Forward paths
+# --------------------------------------------------------------------- #
+def _encode(params, frames, cfg):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = frames + learned_pos(params["encoder"]["pos_enc"], pos, cfg.dtype)
+    ctx = {"positions": pos, "max_len": s}
+    x, _, _ = blocks.stack_apply(
+        params["encoder"]["stack"], x, cfg, ctx,
+        n_layers=cfg.encoder.n_layers, causal=False, allow_cross=False,
+    )
+    return _norm(params["encoder"]["final_norm"], x, cfg)
+
+
+def _make_ctx(params, tokens, cfg, extras, max_len: Optional[int] = None):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ctx: Dict[str, Any] = {"positions": positions, "max_len": max_len or s}
+    if cfg.encoder is not None:
+        ctx["cross_src"] = _encode(params, extras["frames"], cfg)
+    elif cfg.cross_attn_every is not None:
+        ctx["cross_src"] = extras["vision_embeds"]
+    return ctx
+
+
+def forward(params, tokens, cfg, extras=None, collect_cache: bool = False,
+            max_len: Optional[int] = None):
+    """tokens: [B, S] int32 -> (logits [B, S, Vp], aux, caches)."""
+    extras = extras or {}
+    ctx = _make_ctx(params, tokens, cfg, extras, max_len)
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if not cfg.use_rope:
+        x = x + learned_pos(params["pos_dec"], ctx["positions"], cfg.dtype)
+    x, aux, caches = blocks.stack_apply(
+        params["stack"], x, cfg, ctx, collect_cache=collect_cache
+    )
+    x = _norm(params["final_norm"], x, cfg)
+    logits = logits_head(params["embed"], x, cfg)
+    return logits, aux, caches
+
+
+def prefill(params, tokens, cfg, extras=None, max_len: Optional[int] = None):
+    """Populate KV/SSM caches; return (last-token logits, caches)."""
+    logits, _aux, caches = forward(
+        params, tokens, cfg, extras, collect_cache=True, max_len=max_len
+    )
+    return logits[:, -1:], caches
+
+
+def decode_step(params, caches, token, position, cfg, extras=None):
+    """token: [B, 1]; position: [B]. Returns (logits [B,1,Vp], new caches)."""
+    extras = extras or {}
+    b = token.shape[0]
+    ctx: Dict[str, Any] = {
+        "position": position,
+        "positions": position[:, None],
+    }
+    x = embed_tokens(params["embed"], token, cfg)
+    if not cfg.use_rope:
+        x = x + learned_pos(params["pos_dec"], position[:, None], cfg.dtype)
+    x, new_caches = blocks.stack_decode(params["stack"], x, caches, cfg, ctx)
+    x = _norm(params["final_norm"], x, cfg)
+    logits = logits_head(params["embed"], x, cfg)
+    return logits, new_caches
+
+
+# --------------------------------------------------------------------- #
+# Loss
+# --------------------------------------------------------------------- #
+def ce_loss(logits, labels, cfg, z_loss: float = 1e-4):
+    """Cross-entropy over the padded vocab (pad ids masked out)."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > cfg.vocab_size:
+        neg = jnp.full((vp - cfg.vocab_size,), -1e9, jnp.float32)
+        bias = jnp.concatenate([jnp.zeros((cfg.vocab_size,), jnp.float32), neg])
+        logits = logits + bias
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(logz**2)
+    return loss
+
+
+def loss_fn(params, batch, cfg, aux_weight: float = 0.01):
+    logits, aux, _ = forward(params, batch["tokens"], cfg, extras=batch.get("extras"))
+    loss = ce_loss(logits, batch["labels"], cfg)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}

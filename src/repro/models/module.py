@@ -1,0 +1,111 @@
+"""Minimal spec-first module system (no flax dependency).
+
+Every layer declares its parameters as a pytree of :class:`ParamSpec`
+(shape + *logical axis names* + initializer). From one spec tree we derive:
+
+* real parameters for CPU smoke tests (:func:`init_params`),
+* ``ShapeDtypeStruct`` stand-ins with mesh shardings for the dry-run
+  (:func:`abstract_params` — no allocation),
+* ``NamedSharding`` trees for ``jit(in_shardings=...)``
+  (:func:`param_shardings`).
+
+Logical axis names are resolved to mesh axes by
+:mod:`repro.sharding.policy`; layers never mention physical axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = never sharded)
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes/shape rank mismatch: {self.shape} vs {self.axes}")
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    return shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * spec.scale).astype(spec.dtype)
+    if spec.init == "small":
+        std = 0.02 * spec.scale
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    # default: truncated-normal fan-in scaling
+    std = spec.scale / math.sqrt(max(_fan_in(spec.shape), 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, spec.shape) * std).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize real parameters (CPU smoke tests / examples)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_shardings(specs, mesh, rules, log=None):
+    """NamedSharding tree from logical axes via the sharding policy."""
+    from repro.sharding.policy import resolve_spec
+
+    return jax.tree.map(
+        lambda s: resolve_spec(s.shape, s.axes, mesh, rules, log), specs, is_leaf=is_spec
+    )
+
+
+def abstract_params(specs, mesh=None, rules=None, log=None):
+    """ShapeDtypeStruct tree (optionally with shardings) — dry-run inputs."""
+    if mesh is None:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+        )
+    sh = param_shardings(specs, mesh, rules, log)
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        specs,
+        sh,
+        is_leaf=is_spec,
+    )
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(math.prod(s.shape) for s in leaves))
+
+
+def stack_specs(specs, n: int, axis_name: Optional[str] = None):
+    """Stack a spec tree along a new leading 'layers' dim (for lax.scan)."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            shape=(n,) + s.shape,
+            axes=(axis_name,) + s.axes,
+            init=s.init,
+            scale=s.scale,
+            dtype=s.dtype,
+        ),
+        specs,
+        is_leaf=is_spec,
+    )

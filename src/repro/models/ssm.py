@@ -1,0 +1,251 @@
+"""Mamba2-style SSD (state-space duality) block, chunked matmul form.
+
+Implements the SSD algorithm of Mamba-2 (arXiv:2405.21060): the selective
+state-space recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t (x) x_t ,   y_t = C_t . h_t + D x_t
+
+evaluated chunk-wise so that within a chunk the quadratic (attention-like)
+matmul form runs on the MXU, and across chunks only the [B, H, N, P] state
+is carried by a ``lax.scan`` — the TPU-native middle ground between a full
+sequential scan (latency-bound) and the full quadratic form (O(S^2)).
+
+The causal depthwise conv (kernel ``d_conv``) is a shift-and-add over taps
+(no im2col). Decode keeps an O(1) cache: the SSD state plus the last
+``d_conv - 1`` conv inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from repro.models.layers import rmsnorm, with_logical
+from repro.models.module import ParamSpec
+
+
+# --------------------------------------------------------------------- #
+# Specs
+# --------------------------------------------------------------------- #
+def ssm_specs(cfg) -> dict:
+    s, d, pd = cfg.ssm, cfg.d_model, cfg.param_dtype
+    di, n, h = s.d_inner(d), s.d_state, s.n_heads(d)
+    return {
+        "wz": ParamSpec((d, di), ("embed", "inner"), dtype=pd),
+        "wx": ParamSpec((d, di), ("embed", "inner"), dtype=pd),
+        "wB": ParamSpec((d, n), ("embed", "state"), dtype=pd),
+        "wC": ParamSpec((d, n), ("embed", "state"), dtype=pd),
+        "wdt": ParamSpec((d, h), ("embed", None), dtype=pd),
+        "conv_x": ParamSpec((s.d_conv, di), (None, "inner"), init="small", dtype=pd),
+        "conv_B": ParamSpec((s.d_conv, n), (None, "state"), init="small", dtype=pd),
+        "conv_C": ParamSpec((s.d_conv, n), (None, "state"), init="small", dtype=pd),
+        "A_log": ParamSpec((h,), (None,), init="zeros", dtype=jnp.float32),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros", dtype=jnp.float32),
+        "D": ParamSpec((h,), (None,), init="ones", dtype=jnp.float32),
+        "norm": {"scale": ParamSpec((di,), ("inner",), init="ones", dtype=pd)},
+        "wo": ParamSpec((di, d), ("inner", "embed"), dtype=pd),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv via shift-and-add. x: [B, S, C]; w: [K, C].
+
+    ``tail``: [B, K-1, C] previous inputs (decode);  returns conv output of
+    the same length as x."""
+    k = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, C]
+    s = x.shape[1]
+    out = sum(xp[:, i : i + s, :] * w[i][None, None, :].astype(x.dtype) for i in range(k))
+    return out
+
+
+def _project(params, x, cfg):
+    s = cfg.ssm
+    dt = cfg.dtype
+    z = jnp.einsum("bsd,di->bsi", x, params["wz"].astype(dt))
+    xs = jnp.einsum("bsd,di->bsi", x, params["wx"].astype(dt))
+    B = jnp.einsum("bsd,dn->bsn", x, params["wB"].astype(dt))
+    C = jnp.einsum("bsd,dn->bsn", x, params["wC"].astype(dt))
+    dtv = jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt))
+    return z, xs, B, C, dtv
+
+
+# --------------------------------------------------------------------- #
+# Chunked SSD (train / prefill)
+# --------------------------------------------------------------------- #
+def ssd_chunked(x, B, C, dt, A, chunk: int, h0=None):
+    """x: [B,S,H,P]; B,C: [B,S,N]; dt: [B,S,H] (>0); A: [H] (<0).
+
+    Returns (y [B,S,H,P], h_final [B,H,N,P])."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        # Zero-pad: dt=0 => decay exp(0)=1 and contribution dt*B*x = 0, so
+        # padded steps are identity on the state; their outputs are dropped.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    dtc = dt.reshape(b, nc, chunk, h)
+    del s_pad
+
+    loga = dtc * A[None, None, None, :]  # [b, nc, L, h], negative
+    cum = jnp.cumsum(loga, axis=2)  # inclusive within-chunk cumsum
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(hprev, inp):
+        xc_, Bc_, Cc_, dtc_, cum_ = inp  # leading dim b
+        L = xc_.shape[1]
+        # Intra-chunk quadratic form (per head decay mask).
+        cb = jnp.einsum("bin,bjn->bij", Cc_, Bc_).astype(jnp.float32)  # [b,L,L]
+        seg = cum_[:, :, None, :] - cum_[:, None, :, :]  # [b,i,j,h]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        # Mask in log space BEFORE exp: above the diagonal seg > 0 and
+        # exp(seg) overflows, which poisons the backward pass (inf * 0).
+        seg = jnp.where(mask[None, :, :, None], seg, -jnp.inf)
+        decay = jnp.exp(seg)
+        m = cb[:, :, :, None] * decay * dtc_[:, None, :, :]  # [b,i,j,h]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m.astype(xc_.dtype), xc_)
+        # Inter-chunk: contribution of carried state.
+        instate = jnp.exp(cum_)  # [b,i,h]
+        y_inter = jnp.einsum(
+            "bin,bhnp,bih->bihp", Cc_.astype(jnp.float32), hprev, instate
+        ).astype(xc_.dtype)
+        # New carried state.
+        tail = jnp.exp(cum_[:, -1:, :] - cum_)  # exp(cum_L - cum_j) [b,j,h]
+        contrib = jnp.einsum(
+            "bjn,bjhp,bjh->bhnp",
+            Bc_.astype(jnp.float32),
+            xc_.astype(jnp.float32),
+            (dtc_ * tail).astype(jnp.float32),
+        )
+        hnew = jnp.exp(cum_[:, -1, :])[:, :, None, None] * hprev + contrib
+        return hnew, y_intra + y_inter
+
+    inputs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        Bc.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+        dtc.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+    )
+    h_final, yc = jax.lax.scan(step, h0, inputs)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s + pad, h, p)[:, :s]
+    return y, h_final
+
+
+def ssd_sequential_ref(x, B, C, dt, A):
+    """O(S) sequential oracle for tests (fp32)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    hs = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        a = jnp.exp(dt[:, t] * A[None, :])  # [b,h]
+        upd = jnp.einsum("bn,bhp,bh->bhnp", B[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32), dt[:, t])
+        hs = a[:, :, None, None] * hs + upd
+        ys.append(jnp.einsum("bn,bhnp->bhp", C[:, t].astype(jnp.float32), hs))
+    return jnp.stack(ys, axis=1)  # [b,s,h,p]
+
+
+# --------------------------------------------------------------------- #
+# Block-level apply
+# --------------------------------------------------------------------- #
+def _split_heads(xs, cfg):
+    s = cfg.ssm
+    b, L, di = xs.shape
+    return xs.reshape(b, L, di // s.head_dim, s.head_dim)
+
+
+def ssm_block(params, x, cfg, conv_tail=None, h0=None, return_cache: bool = False):
+    """Full-sequence SSD block. x: [B, S, D] -> [B, S, D] (+ cache)."""
+    s = cfg.ssm
+    z, xs, B, C, dtv = _project(params, x, cfg)
+    tail_x = tail_B = tail_C = None
+    if conv_tail is not None:
+        tail_x, tail_B, tail_C = conv_tail["x"], conv_tail["B"], conv_tail["C"]
+    conv_in = {"x": xs, "B": B, "C": C}
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"], tail_x))
+    B = jax.nn.silu(_causal_conv(B, params["conv_B"], tail_B))
+    C = jax.nn.silu(_causal_conv(C, params["conv_C"], tail_C))
+    xs = with_logical(xs, ("batch", None, "inner"))
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dtv.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    xh = _split_heads(xs, cfg)
+    y, h_final = ssd_chunked(xh, B, C, dt, A, chunk=min(s.chunk, x.shape[1]), h0=h0)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(z.shape)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"].astype(cfg.dtype))
+    out = with_logical(out, ("batch", None, None))
+    if not return_cache:
+        return out, None
+    k = s.d_conv - 1
+    cache = {
+        "h": h_final,
+        "conv": {name: arr[:, -k:, :] for name, arr in conv_in.items()},
+    }
+    return out, cache
+
+
+def ssm_cache_specs(cfg, batch: int):
+    s = cfg.ssm
+    di, n, h = s.d_inner(cfg.d_model), s.d_state, s.n_heads(cfg.d_model)
+    k = s.d_conv - 1
+    return {
+        "h": ((batch, h, n, s.head_dim), ("cache_batch", None, "state", None), jnp.float32),
+        "conv": {
+            "x": ((batch, k, di), ("cache_batch", None, "inner"), cfg.dtype),
+            "B": ((batch, k, n), ("cache_batch", None, "state"), cfg.dtype),
+            "C": ((batch, k, n), ("cache_batch", None, "state"), cfg.dtype),
+        },
+    }
+
+
+def init_ssm_cache(cfg, batch: int):
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd[0], sd[2]),
+        ssm_cache_specs(cfg, batch),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple),
+    )
+
+
+def ssm_block_decode(params, x, cache, cfg):
+    """One-token decode. x: [B, 1, D] -> (out [B, 1, D], new cache)."""
+    s = cfg.ssm
+    z, xs, B, C, dtv = _project(params, x, cfg)
+    conv_prev = cache["conv"]
+    new_conv = {
+        "x": jnp.concatenate([conv_prev["x"][:, 1:], xs], axis=1),
+        "B": jnp.concatenate([conv_prev["B"][:, 1:], B], axis=1),
+        "C": jnp.concatenate([conv_prev["C"][:, 1:], C], axis=1),
+    }
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"], conv_prev["x"]))
+    B = jax.nn.silu(_causal_conv(B, params["conv_B"], conv_prev["B"]))
+    C = jax.nn.silu(_causal_conv(C, params["conv_C"], conv_prev["C"]))
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dtv.astype(jnp.float32) + params["dt_bias"][None, None, :])[:, 0]
+    xh = _split_heads(xs, cfg)[:, 0]  # [B, H, P]
+    a = jnp.exp(dt * A[None, :])  # [B, H]
+    upd = jnp.einsum("bn,bhp,bh->bhnp", B[:, 0].astype(jnp.float32),
+                     xh.astype(jnp.float32), dt)
+    h = a[:, :, None, None] * cache["h"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(jnp.float32), h).astype(cfg.dtype)
+    y = y + params["D"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(z.shape[0], 1, -1)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"].astype(cfg.dtype))
+    return out, {"h": h, "conv": new_conv}

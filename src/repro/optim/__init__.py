@@ -1,0 +1,29 @@
+"""Optimizers (no optax dependency): AdamW and Adafactor.
+
+Optimizer states inherit the parameters' sharding (ZeRO-1 comes for free
+from the FSDP param layout). ``get_optimizer`` dispatches on the arch
+config — the >=100B archs use Adafactor so the training state fits the
+16 GB/chip v5e budget (see configs/grok1_314b.py)."""
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import warmup_cosine
+from repro.optim.base import Optimizer, apply_updates, global_norm, clip_by_global_norm
+
+
+def get_optimizer(cfg, lr: float = 3e-4, warmup: int = 100, total: int = 10_000):
+    sched = warmup_cosine(lr, warmup, total)
+    if cfg.optimizer == "adafactor":
+        return adafactor(sched)
+    return adamw(sched)
+
+
+__all__ = [
+    "adamw",
+    "adafactor",
+    "warmup_cosine",
+    "Optimizer",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "get_optimizer",
+]

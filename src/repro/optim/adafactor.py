@@ -1,0 +1,71 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments, no momentum.
+
+For a [r, c] parameter the second-moment estimate is stored as a rank-1
+factorization (row + col running means) — O(r + c) instead of O(r c)
+optimizer state. This is what lets the 314B/398B assigned archs train
+inside the v5e 16 GB/chip budget (see EXPERIMENTS.md memory table).
+1-D parameters fall back to the full second moment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adafactor(lr_fn, decay: float = 0.8, eps1: float = 1e-30, eps2: float = 1e-3,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row means
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        lr = lr_fn(step_f)
+        beta = 1.0 - step_f ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if _factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps1)
+                precond = (vr / denom)[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(precond + eps1)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps1)
+                new_s = {"v": v}
+            # Update clipping (RMS <= clip_threshold).
+            rms = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            scale = jnp.maximum(
+                eps2, jnp.sqrt(jnp.mean(p.astype(jnp.float32) ** 2))
+            )  # relative step
+            out = -lr * scale * u
+            if weight_decay:
+                out = out - lr * weight_decay * p.astype(jnp.float32)
+            return out, new_s
+
+        g_leaves, tdef = jax.tree.flatten(grads)
+        s_leaves = tdef.flatten_up_to(state)
+        p_leaves = jax.tree.leaves(params)
+        outs = [upd(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+        updates = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_state = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,31 @@
+"""Optimizer interface and gradient utilities."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Pair of pure functions (optax-style, dependency-free)."""
+
+    init: Callable[[Any], Any]  # params -> state
+    update: Callable[..., Any]  # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

@@ -1,0 +1,258 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = wire_bytes_per_device / (ICI_LINKS_PER_AXIS * ICI_BW_PER_LINK)
+
+``cost_analysis()`` on the compiled (post-SPMD) module is already
+per-device. Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO text and sum, per collective op, a ring-model wire estimate:
+
+  all-gather      (n-1)/n * result_bytes
+  reduce-scatter  (n-1)/n * operand_bytes
+  all-reduce      2 (n-1)/n * operand_bytes
+  all-to-all      (n-1)/n * operand_bytes
+  collective-permute  operand_bytes
+
+with ``n`` the replica-group size parsed from the op. Raw operand bytes
+are also recorded for reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?condition=(%[\w\.\-]+),\s*body=(%[\w\.\-]+)")
+_TRIP_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def split_computations(hlo_text: str):
+    """-> (comps: {name: [lines]}, entry_name)."""
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m and cur is None:
+            cur = m.group(2)
+            if m.group(1):
+                entry = cur
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.rstrip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def loop_multipliers(hlo_text: str) -> Dict[str, float]:
+    """Execution count per computation, accounting nested while loops.
+
+    XLA's cost_analysis (and a naive text scan) counts a while body ONCE;
+    real execution repeats it trip-count times. The scan trip count is the
+    s32 constant in the while's condition computation (the loop bound the
+    counter is compared against)."""
+    comps, entry = split_computations(hlo_text)
+    if entry is None:
+        return {}
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+
+    def trips_of(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for m in _TRIP_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # Propagate through the while nesting (bodies can contain whiles).
+    changed = True
+    guard = 0
+    while changed and guard < 100:
+        changed = False
+        guard += 1
+        for name, lines in comps.items():
+            if mult.get(name, 0.0) <= 0.0:
+                continue
+            for line in lines:
+                w = _WHILE_RE.search(line)
+                if w:
+                    cond, body = w.group(1), w.group(2)
+                    m_new = mult[name] * trips_of(cond)
+                    if m_new > mult.get(body, 0.0):
+                        mult[body] = m_new
+                        changed = True
+    return mult
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'f32[16,4096]' or a tuple '(f32[..], s32[..])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: Dict[str, int]  # op kind -> raw result/operand bytes
+    wire_bytes: Dict[str, int]  # op kind -> ring-model wire bytes per device
+    count: Dict[str, int]
+
+    @property
+    def total_wire(self) -> int:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_raw(self) -> int:
+        return sum(self.op_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Loop-aware collective extraction: per-op wire bytes are multiplied by
+    the execution count of the enclosing computation (while trip products)."""
+    comps, entry = split_computations(hlo_text)
+    mult = loop_multipliers(hlo_text)
+    op_bytes: Dict[str, int] = defaultdict(int)
+    wire: Dict[str, int] = defaultdict(int)
+    count: Dict[str, int] = defaultdict(int)
+    for comp_name, lines in comps.items():
+        k = mult.get(comp_name, 0.0)
+        if k <= 0.0:
+            continue
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if m is None:
+                continue
+            shape_str, kind = m.group(1), m.group(2)
+            size = _shape_bytes(shape_str)
+            if size == 0:
+                continue
+            n = None
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                n = int(gm.group(2))
+            else:
+                gl = _GROUPS_LIST_RE.search(line)
+                if gl:
+                    n = len([x for x in gl.group(1).split(",") if x.strip() != ""])
+            if n is None or n <= 1:
+                n = 2  # conservative
+            ring = (n - 1) / n
+            count[kind] += int(k)
+            op_bytes[kind] += int(k * size)
+            if kind == "all-gather":
+                wire[kind] += int(k * ring * size)  # size = result bytes
+            elif kind == "reduce-scatter":
+                wire[kind] += int(k * ring * size)
+            elif kind == "all-reduce":
+                wire[kind] += int(k * 2 * ring * size)
+            elif kind == "all-to-all":
+                wire[kind] += int(k * ring * size)
+            else:  # collective-permute
+                wire[kind] += int(k * size)
+    return CollectiveStats(op_bytes=dict(op_bytes), wire_bytes=dict(wire), count=dict(count))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: Optional[float] = None
+    useful_fraction: Optional[float] = None  # MODEL_FLOPS / (flops * chips)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes: float, wire_bytes: float,
+                   n_chips: int, model_flops: Optional[float] = None) -> Roofline:
+    compute = flops_per_device / hw.PEAK_FLOPS_BF16
+    memory = hbm_bytes / hw.HBM_BW
+    coll = wire_bytes / (hw.ICI_LINKS_PER_AXIS * hw.ICI_BW_PER_LINK)
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    bottleneck = max(terms, key=terms.get)
+    useful = None
+    if model_flops:
+        useful = model_flops / max(flops_per_device * n_chips, 1.0)
+    return Roofline(
+        flops_per_device=flops_per_device,
+        hbm_bytes_per_device=hbm_bytes,
+        wire_bytes_per_device=wire_bytes,
+        compute_s=compute,
+        memory_s=memory,
+        collective_s=coll,
+        bottleneck=bottleneck,
+        model_flops_total=model_flops,
+        useful_fraction=useful,
+    )
+
+
+# --------------------------------------------------------------------- #
+# MODEL_FLOPS (the "useful work" yardstick)
+# --------------------------------------------------------------------- #
+def active_params(cfg) -> int:
+    """Active parameters per token (MoE: top_k/n_experts of routed experts)."""
+    from repro.models.model import build_specs
+    from repro.models.module import is_spec
+
+    import jax
+
+    specs = build_specs(cfg)
+    total = 0
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_spec
+    )[0]:
+        n = 1
+        for d in spec.shape:
+            n *= d
+        if "experts" in (spec.axes or ()):  # routed expert weight
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+def model_flops(cfg, shape, total_params: int, act_params: int) -> float:
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * act_params * tokens
+    if shape.kind == "prefill":
+        return 2.0 * act_params * tokens
+    # decode: one token per sequence
+    return 2.0 * act_params * shape.global_batch

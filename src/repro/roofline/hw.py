@@ -1,0 +1,9 @@
+"""TPU v5e hardware constants (the TARGET platform of this repo)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9  # bytes/s per link (~50 GB/s)
+# 2-D torus: collectives along one mesh axis use the bidirectional ring on
+# that axis => 2 links of wire bandwidth per chip.
+ICI_LINKS_PER_AXIS = 2
+HBM_BYTES = 16 * 1024**3  # 16 GiB per chip

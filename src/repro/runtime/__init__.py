@@ -1,0 +1,11 @@
+from repro.runtime.train_loop import TrainLoop, make_train_step
+from repro.runtime.fault import FailureInjector, run_with_retries
+from repro.runtime.serve_loop import greedy_generate
+
+__all__ = [
+    "TrainLoop",
+    "make_train_step",
+    "FailureInjector",
+    "run_with_retries",
+    "greedy_generate",
+]

@@ -1,0 +1,54 @@
+"""Fault tolerance utilities: failure injection and idempotent retries.
+
+Synchronous SPMD handles intra-step consistency (lockstep collectives); the
+framework-level story is:
+
+* training — checkpoint/restart (TrainLoop.try_resume), bit-identical
+  resume from step-indexed data;
+* k-core — every part of the divide step is an idempotent sub-task over
+  immutable inputs; ``run_with_retries`` re-runs a failed/straggling part
+  without touching finished parts (the paper's 27.5 h WX-136B run is a
+  sequence of such parts);
+* stragglers — host-side input lag is absorbed by the Prefetcher queue; a
+  slow *worker* in synchronous SPMD is indistinguishable from a slow step,
+  so mitigation happens at the part/job scheduler level via retry +
+  checkpoint granularity (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Set
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raise at the given steps — once each (simulated worker loss)."""
+
+    fail_at: Set[int]
+    raised: Set[int] = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.raised:
+            self.raised.add(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+def run_with_retries(fn: Callable, retries: int = 2, backoff_s: float = 0.0,
+                     on_retry: Optional[Callable] = None):
+    """Run an idempotent sub-task, retrying on failure."""
+    last = None
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except Exception as e:  # noqa: BLE001 — deliberate catch-all boundary
+            last = e
+            if on_retry is not None:
+                on_retry(attempt, e)
+            if backoff_s:
+                time.sleep(backoff_s * (attempt + 1))
+    raise last

@@ -1,0 +1,31 @@
+"""Batched serving loop: prefill + greedy decode over the KV caches."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import decode_step, prefill
+
+
+def greedy_generate(params, prompt, cfg, n_new: int, extras=None,
+                    max_len: Optional[int] = None, jit: bool = True):
+    """prompt: [B, S] int32 -> generated [B, n_new] int32 (greedy)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + n_new)
+    step_fn = decode_step
+    if jit:
+        step_fn = jax.jit(decode_step, static_argnames=("cfg",))
+    logits, caches = prefill(params, prompt, cfg, extras=extras, max_len=max_len)
+    # Mask padded vocab before argmax.
+    vmask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+    token = jnp.argmax(jnp.where(vmask, logits[:, -1], -jnp.inf), axis=-1)[:, None]
+    out = [token]
+    pos = jnp.full((b,), s, jnp.int32)
+    for _ in range(n_new - 1):
+        logits, caches = step_fn(params, caches, token.astype(jnp.int32), pos, cfg)
+        token = jnp.argmax(jnp.where(vmask, logits[:, -1], -jnp.inf), axis=-1)[:, None]
+        out.append(token)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1).astype(jnp.int32)

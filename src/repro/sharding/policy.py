@@ -1,0 +1,237 @@
+"""Logical-axis -> mesh-axis sharding policy with divisibility fallback.
+
+One place decides how every tensor in the system is laid out on the mesh.
+Layers annotate *logical* axes ("embed", "mlp", "heads", "experts", ...);
+:func:`resolve` maps them to mesh axes using a rules table and falls back to
+replication whenever the dimension is not divisible by the mesh axis size
+(e.g. granite's 49155 vocab before padding, grok's 8 experts on a 16-wide
+model axis). Fallbacks are recorded so the dry-run can report them.
+
+Default rules (the "megatron+fsdp" layout):
+
+  batch   -> ("pod", "data")   pure DP across pods (DCN-friendly)
+  embed   -> "data"            FSDP/ZeRO-3: params gathered on use
+  vocab   -> "model"           tensor-parallel embedding / logits
+  heads   -> "model"           attention TP
+  mlp     -> "model"           feed-forward TP
+  experts -> "model"           expert parallelism (when divisible)
+  kv_heads-> "model"           (falls back to replicated for kv < 16)
+  layers  -> None              scan dim, never sharded
+  seq     -> None              (the long-decode cache overrides to "data")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Optional[str]
+MeshAxes = Optional[Tuple[str, ...]]
+
+# ------------------------------------------------------------------ #
+# Active mesh axes: layers emit logical activation constraints like
+# P(("pod","data"), None); before reaching XLA they are filtered to the
+# axes of the mesh actually in scope (single-pod meshes have no "pod";
+# CPU smoke tests have no mesh at all -> constraints become no-ops).
+# ------------------------------------------------------------------ #
+_ACTIVE_AXES: Dict[str, int] = {}
+_ACTIVE_RULES: Optional[Dict[str, MeshAxes]] = None
+
+
+class active_mesh:
+    """Context manager: declare the mesh (and optionally the rules table)
+    whose axes activation constraints may use."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None):
+        self.axes = dict(zip(mesh.axis_names, mesh.shape.values())) if mesh is not None else {}
+        self.rules = rules
+
+    def __enter__(self):
+        global _ACTIVE_AXES, _ACTIVE_RULES
+        self._saved = (_ACTIVE_AXES, _ACTIVE_RULES)
+        _ACTIVE_AXES = self.axes
+        _ACTIVE_RULES = self.rules
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_AXES, _ACTIVE_RULES
+        _ACTIVE_AXES, _ACTIVE_RULES = self._saved
+        return False
+
+
+def filter_spec(spec: P) -> Optional[P]:
+    """Drop axes not present in the active mesh; None if no mesh active."""
+    if not _ACTIVE_AXES:
+        return None
+    parts = []
+    for entry in spec:
+        if entry is None:
+            parts.append(None)
+        elif isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in _ACTIVE_AXES)
+            parts.append(kept if kept else None)
+        else:
+            parts.append(entry if entry in _ACTIVE_AXES else None)
+    return P(*parts)
+
+
+def active_dp_size() -> int:
+    """Product of active batch-rule axes (1 without an active mesh)."""
+    if not _ACTIVE_AXES:
+        return 1
+    rules = _ACTIVE_RULES or DEFAULT_RULES
+    out = 1
+    for ax in rules.get("batch") or ():
+        out *= _ACTIVE_AXES.get(ax, 1)
+    return out
+
+
+def logical_spec(shape: Sequence[int], axes: Sequence[Axis]) -> Optional[P]:
+    """Resolve LOGICAL axes for an activation against the active mesh with
+    divisibility fallback — e.g. an [8, cap, d] expert buffer only gets
+    P("model", ...) when 8 divides the model axis (jamba 16e yes, grok 8e
+    no). Returns None when no mesh is active."""
+    if not _ACTIVE_AXES:
+        return None
+    rules = _ACTIVE_RULES or DEFAULT_RULES
+    used: set = set()
+    parts = []
+    for size, name in zip(shape, axes):
+        if name is None:
+            parts.append(None)
+            continue
+        mesh_axes = rules.get(name)
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        chosen = []
+        prod = 1
+        for ax in mesh_axes:
+            if ax not in _ACTIVE_AXES or ax in used:
+                continue
+            nsize = _ACTIVE_AXES[ax]
+            if size % (prod * nsize) != 0:
+                continue
+            chosen.append(ax)
+            prod *= nsize
+        if not chosen:
+            parts.append(None)
+        else:
+            parts.append(chosen[0] if len(chosen) == 1 else tuple(chosen))
+            used.update(chosen)
+    return P(*parts)
+
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert_mlp": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),  # SSM d_inner
+    "layers": None,
+    "seq": None,
+    "cache_seq": None,
+    "cache_batch": ("pod", "data"),
+    "state": None,
+    "conv": None,
+    "frames": None,
+    "patches": None,
+}
+
+# Variants used by the perf pass; selected per arch/shape in configs.
+LONG_DECODE_RULES = dict(DEFAULT_RULES, cache_seq=("data",), cache_batch=None)
+TP_ONLY_RULES = dict(DEFAULT_RULES, embed=None)
+
+# Decode/serving layout (§Perf iteration, jamba decode_32k): the default
+# (training) rules FSDP-shard params over "data" and re-gather the full
+# weights EVERY decode step — ~full-model bytes of all-gather per token.
+# SERVE_RULES instead run Megatron-style tensor parallelism over the
+# FLATTENED (data x model) = 256-way axis on the weights' output dims:
+# weights stay resident, each block pays one small activation all-reduce
+# (column-parallel in, row-parallel out), and the KV cache shards over its
+# sequence dim (flash-decode style) so the cache read parallelizes too.
+SERVE_RULES = dict(
+    DEFAULT_RULES,
+    batch=None,
+    embed=None,
+    mlp=("data", "model"),
+    expert_mlp=("data", "model"),
+    inner=("data", "model"),
+    heads=("data", "model"),
+    kv_heads=("model",),
+    vocab=("data", "model"),
+    cache_batch=None,
+    cache_seq=("data",),
+)
+
+
+@dataclasses.dataclass
+class ResolveLog:
+    """Fallbacks recorded during resolution (reported by the dry-run)."""
+
+    replicated: list = dataclasses.field(default_factory=list)
+
+    def note(self, axes, dim, size, axis_size):
+        self.replicated.append((axes, dim, size, axis_size))
+
+
+def resolve(
+    shape: Sequence[int],
+    axes: Sequence[Axis],
+    mesh: Mesh,
+    rules: Optional[Dict[str, MeshAxes]] = None,
+    log: Optional[ResolveLog] = None,
+) -> P:
+    """PartitionSpec for a tensor with the given logical axes."""
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    parts = []
+    for dim, (size, name) in enumerate(zip(shape, axes)):
+        if name is None:
+            parts.append(None)
+            continue
+        mesh_axes = rules.get(name)
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        # Keep only axes present in this mesh, unused so far, and divisible.
+        chosen = []
+        prod = 1
+        for ax in mesh_axes:
+            if ax not in mesh.shape or ax in used:
+                continue
+            nsize = mesh.shape[ax]
+            if size % (prod * nsize) != 0:
+                if log is not None:
+                    log.note(tuple(axes), dim, size, nsize)
+                continue
+            chosen.append(ax)
+            prod *= nsize
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+            used.add(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+            used.update(chosen)
+    return P(*parts)
+
+
+def resolve_spec(shape, axes, mesh, rules=None, log=None) -> NamedSharding:
+    return NamedSharding(mesh, resolve(shape, axes, mesh, rules, log))
+
+
+def data_axes(mesh: Mesh, rules=None) -> Tuple[str, ...]:
+    """Mesh axes carrying the batch (for per-device batch calculations)."""
+    rules = rules or DEFAULT_RULES
+    return tuple(a for a in (rules.get("batch") or ()) if a in mesh.shape)
+
+
+def dp_size(mesh: Mesh, rules=None) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh, rules)], initial=1))

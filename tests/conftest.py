@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: XLA_FLAGS / device-count overrides are deliberately
+NOT set here — smoke tests and benches must see the single real CPU device.
+Multi-device tests spawn subprocesses with their own env (see
+tests/distributed_helpers.py)."""
+import numpy as np
+import pytest
+
+from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
+
+
+@pytest.fixture(scope="session")
+def ba_graph():
+    return barabasi_albert(n=2000, m=5, seed=7)
+
+
+@pytest.fixture(scope="session")
+def rmat_graph():
+    """Power-law graph with a wide coreness spread (0..~33) — the main
+    fixture for divide/conquer tests."""
+    return rmat(11, 8, seed=7)
+
+
+@pytest.fixture(scope="session")
+def er_graph():
+    return erdos_renyi(n=1500, avg_deg=8.0, seed=3)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,34 @@
+"""Run snippets in a subprocess with N virtual XLA host devices.
+
+The main pytest process must keep a single CPU device (smoke tests / benches
+depend on it), so every multi-device test spawns a fresh interpreter with
+``--xla_force_host_platform_device_count=N``."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + env.get("XLA_FLAGS", "").replace(
+            next((t for t in env.get("XLA_FLAGS", "").split() if "device_count" in t), ""), ""
+        )
+    ).strip()
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=REPO,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+        )
+    return proc.stdout

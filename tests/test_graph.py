@@ -1,0 +1,107 @@
+"""Graph substrate tests: construction, generators, oracle, bucketing."""
+import numpy as np
+import pytest
+
+from repro.graph.build import bucketize, external_info, induced_subgraph
+from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
+from repro.graph.oracle import nx_coreness, peel_coreness, peel_kcore_mask
+from repro.graph.structs import Graph
+
+
+def test_from_edges_symmetrize_dedup():
+    g = Graph.from_edges([0, 1, 1, 2, 0], [1, 0, 2, 1, 0], n_nodes=4)
+    # self loop (0,0) dropped; (0,1) dup dropped; symmetric.
+    assert g.n_edges == 2
+    assert set(g.neighbors(1).tolist()) == {0, 2}
+    assert g.degrees.tolist() == [1, 2, 1, 0]
+    g.validate()
+
+
+def test_generators_basic():
+    for g in [erdos_renyi(500, 6.0, seed=1), barabasi_albert(500, 4, seed=1), rmat(9, 8, seed=1)]:
+        g.validate()
+        assert g.n_edges > 0
+        # Undirected: each edge counted twice in indices.
+        assert g.indices.shape[0] == 2 * g.n_edges
+
+
+def test_ba_powerlaw_tail():
+    g = barabasi_albert(3000, 5, seed=0)
+    deg = g.degrees
+    assert deg.max() > 10 * np.median(deg[deg > 0])  # heavy tail
+
+
+def test_peel_matches_networkx(er_graph, ba_graph):
+    for g in [er_graph, ba_graph]:
+        np.testing.assert_array_equal(peel_coreness(g), nx_coreness(g))
+
+
+def test_peel_kcore_mask(ba_graph):
+    core = peel_coreness(ba_graph)
+    for k in [2, 3, 5]:
+        mask = peel_kcore_mask(ba_graph, k)
+        np.testing.assert_array_equal(mask, core >= k)
+
+
+def test_induced_subgraph_and_external_info(rmat_graph):
+    g = rmat_graph
+    core = peel_coreness(g)
+    k = int(np.median(core)) + 1  # guarantee both sides non-empty
+    upper = core >= k
+    assert upper.any() and (~upper).any()
+    sub, ids = induced_subgraph(g, upper)
+    assert sub.n_nodes == int(upper.sum())
+    # Every kept edge exists in the original graph.
+    for v_new in range(min(sub.n_nodes, 50)):
+        v_old = ids[v_new]
+        neigh_old = set(g.neighbors(v_old).tolist())
+        for u_new in sub.neighbors(v_new):
+            assert int(ids[u_new]) in neigh_old
+    # External info of the complement counts cross edges exactly.
+    ext = external_info(g, ~upper, upper)
+    lower_ids = np.nonzero(~upper)[0]
+    for i in np.random.default_rng(0).choice(len(lower_ids), size=30):
+        v = lower_ids[i]
+        expect = int(np.sum(upper[g.neighbors(v)]))
+        assert ext[i] == expect
+
+
+def test_bucketize_roundtrip(rmat_graph):
+    g = rmat_graph
+    bg = bucketize(g)
+    deg = g.degrees
+    seen = np.zeros(g.n_nodes, dtype=bool)
+    for b in bg.buckets:
+        rows = b.node_ids[b.node_ids < g.n_nodes]
+        assert not seen[rows].any()
+        seen[rows] = True
+        for r, v in enumerate(rows[: min(len(rows), 20)]):
+            row = b.neigh[r]
+            real = row[row < g.n_nodes]
+            assert sorted(real.tolist()) == sorted(g.neighbors(v).tolist())
+            assert b.deg[r] == deg[v]
+            assert deg[v] <= b.width
+    # All nonzero-degree nodes covered exactly once; zero-degree excluded.
+    np.testing.assert_array_equal(seen, deg > 0)
+    # Padding bounded: total slots <= 2x edges (power-of-two buckets) + rows.
+    assert bg.padded_slots <= 4 * g.indices.shape[0] + sum(b.n_rows * 1 for b in bg.buckets) * 8
+
+
+def test_edge_cases():
+    """Empty graphs, isolated nodes, self-loop-only inputs."""
+    import jax
+    from repro.core.decompose import decompose
+    from repro.core.dckcore import dc_kcore
+
+    empty = Graph.from_edges(np.array([], dtype=np.int64), np.array([], dtype=np.int64), n_nodes=5)
+    core, _ = dc_kcore(empty, thresholds=(2,))
+    np.testing.assert_array_equal(core, np.zeros(5, np.int32))
+
+    loops = Graph.from_edges([0, 1, 2], [0, 1, 2], n_nodes=3)  # all self-loops
+    assert loops.n_edges == 0
+    core, _ = dc_kcore(loops, thresholds=())
+    np.testing.assert_array_equal(core, np.zeros(3, np.int32))
+
+    pair = Graph.from_edges([0], [1], n_nodes=4)  # one edge + 2 isolated
+    core, _ = dc_kcore(pair, thresholds=(1,))
+    np.testing.assert_array_equal(core, np.array([1, 1, 0, 0], np.int32))

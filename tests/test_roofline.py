@@ -1,0 +1,107 @@
+"""Roofline machinery validation.
+
+1. loop_multipliers recovers scan trip counts from compiled HLO.
+2. parse_collectives multiplies collectives inside scan bodies.
+3. The analytic FLOPs model matches XLA's count on a no-loop (single-layer,
+   full-attention, unrolled) config — the basis for using the analytic model
+   on scanned stacks where XLA's count is loop-blind (verified 8x off).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from distributed_helpers import run_with_devices
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.models.model import build_specs, forward
+from repro.models.module import count_params, init_params
+from repro.roofline import flops_model
+from repro.roofline.analysis import loop_multipliers, parse_collectives, split_computations
+
+
+def test_loop_multipliers_scan():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, ws).compile().as_text()
+    mult = loop_multipliers(txt)
+    assert max(mult.values()) >= 7.0  # forward (and backward-less) body x7
+
+
+def test_collectives_loop_corrected():
+    out = run_with_devices(
+        r"""
+import jax, jax.numpy as jnp, json
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.roofline.analysis import parse_collectives
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+def body(x, w):
+    return jnp.tanh(x @ w), None
+def f(x, ws):
+    y, _ = jax.lax.scan(body, x, ws)
+    return y
+xs = jax.ShapeDtypeStruct((64, 256), jnp.float32, sharding=NamedSharding(mesh, P("data", "model")))
+ws = jax.ShapeDtypeStruct((6, 256, 256), jnp.float32, sharding=NamedSharding(mesh, P(None, "model", None)))
+txt = jax.jit(f).lower(xs, ws).compile().as_text()
+stats = parse_collectives(txt)
+# one all-reduce per scan step (contraction over model-sharded dim) = 6 total
+print("COUNT", stats.count.get("all-reduce", 0))
+""",
+        n_devices=8,
+    )
+    count = int(out.strip().split("COUNT")[-1])
+    assert count >= 6
+
+
+def _tiny_cfg():
+    return ModelConfig(
+        name="probe", family="dense", n_layers=1, d_model=256, n_heads=4,
+        n_kv_heads=4, head_dim=64, d_ff=1024, vocab_size=4096,
+        dtype=jnp.float32, param_dtype=jnp.float32,
+        attention_impl="full", tie_embeddings=True,
+    )
+
+
+def test_analytic_flops_matches_hlo_unrolled():
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("probe", "prefill", seq_len=512, global_batch=4)
+    specs = build_specs(cfg)
+    params_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape"),
+    )
+    tokens = jax.ShapeDtypeStruct((4, 512), jnp.int32)
+
+    def fwd(p, t):
+        logits, _, _ = forward(p, t, cfg)
+        return logits
+
+    compiled = jax.jit(fwd).lower(params_abs, tokens).compile()
+    hlo_flops = float(compiled.cost_analysis()["flops"])
+    analytic = flops_model.cost(cfg, shape, count_params(specs), n_chips=1).flops_total
+    # n_layers=1 => the stack scan has trip count 1, so HLO is loop-exact
+    # here; softmax/norm flops make HLO slightly larger.
+    assert hlo_flops == pytest.approx(analytic, rel=0.15), (hlo_flops, analytic)
+
+
+def test_memory_model_sane():
+    from repro.configs import get_config
+
+    cfg = get_config("grok-1-314b")
+    shape = SHAPES["train_4k"]
+    n = 316_489_340_928
+    m = flops_model.device_memory_model(cfg, shape, n, n_chips=256, dp=16, accum_steps=16)
+    assert m["params"] == pytest.approx(n * 2 / 256)
+    assert 0 < m["total"] < 16 * 2**30  # grok fits by design choices
+    # decode: KV cache dominates params for gemma3 decode_32k
+    cfg2 = get_config("gemma3-27b")
+    m2 = flops_model.device_memory_model(cfg2, SHAPES["decode_32k"], 28_000_000_000, 256, 16)
+    assert m2["kv_cache"] > 0

@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. DC-kCore full pipeline (budget-planned thresholds, rough divide, the
+   jit conquer engine) == oracle, with the paper's resource claim (peak
+   part memory < monolithic) holding.
+2. LM training end-to-end: a reduced assigned-arch config trains for 30
+   steps through the full stack (data -> loss -> grads -> AdamW -> ckpt)
+   and the loss drops.
+3. Serving end-to-end: prefill + greedy decode produce deterministic
+   tokens consistent with teacher-forced argmax.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dc_kcore, plan_thresholds
+from repro.configs import get_smoke_config
+from repro.data import SyntheticTokens
+from repro.graph import rmat
+from repro.graph.oracle import peel_coreness
+from repro.models.model import build_specs, forward
+from repro.models.module import init_params
+from repro.optim import get_optimizer
+from repro.runtime import TrainLoop, greedy_generate
+
+
+def test_kcore_pipeline_end_to_end():
+    g = rmat(13, 12, seed=4)
+    budget = g.memory_bytes() // 2
+    thresholds = plan_thresholds(g, budget) or [16]
+    core, report = dc_kcore(g, thresholds=thresholds, strategy="rough")
+    np.testing.assert_array_equal(core, peel_coreness(g))
+    _, mono = dc_kcore(g, thresholds=())
+    assert report.peak_bytes < mono.peak_bytes
+    assert report.total_comm > 0 and report.total_iterations >= 2
+
+
+def test_lm_training_end_to_end(tmp_path):
+    cfg = get_smoke_config("qwen3-8b")
+    loop = TrainLoop(
+        cfg=cfg,
+        params=init_params(build_specs(cfg), jax.random.PRNGKey(0)),
+        optimizer=get_optimizer(cfg, lr=3e-3, warmup=5, total=30),
+        data=SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32, batch=4, seed=0),
+        ckpt_dir=str(tmp_path / "ck"),
+        ckpt_every=10,
+        ckpt_blocking=True,
+    )
+    hist = loop.run(30, log_every=5)
+    assert hist["loss"][-1] < hist["loss"][0]
+    # A fresh loop resumes from the saved state at the right step.
+    loop2 = TrainLoop(
+        cfg=cfg,
+        params=init_params(build_specs(cfg), jax.random.PRNGKey(0)),
+        optimizer=get_optimizer(cfg, lr=3e-3, warmup=5, total=30),
+        data=SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32, batch=4, seed=0),
+        ckpt_dir=str(tmp_path / "ck"),
+    )
+    assert loop2.try_resume() and loop2.step == 30
+
+
+def test_serving_end_to_end():
+    cfg = get_smoke_config("granite-3-2b")
+    params = init_params(build_specs(cfg), jax.random.PRNGKey(1))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)
+    out = greedy_generate(params, prompt, cfg, n_new=4, jit=False)
+    assert out.shape == (2, 4)
+    # Cross-check against teacher-forced argmax over the full sequence.
+    seq = jnp.concatenate([prompt, out[:, :3].astype(prompt.dtype)], axis=1)
+    logits, _, _ = forward(params, seq, cfg)
+    vmask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+    expect = jnp.argmax(jnp.where(vmask, logits[:, 15:], -jnp.inf), axis=-1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect[:, :4]))
