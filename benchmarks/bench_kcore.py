@@ -12,6 +12,10 @@ scaled to CPU budget. The metrics mirror the paper's:
   Fig 9    Rough- vs Exact-Divide extraction time
   Fig 10   total communication vs number of parts (2-4)
   Fig 11   preprocessing cost vs number of parts
+  Fig 12*  frontier work: total gathered rows, active-frontier scheduling
+           vs the always-full-sweep baseline (*not in the paper — the
+           work-per-iteration metric this repo adds alongside the paper's
+           communication amount)
   §5.2     correctness: every engine == BZ peeling oracle
 """
 from __future__ import annotations
@@ -93,9 +97,11 @@ def fig8_comm_amount():
     for name, g, t in _graphs()[:2]:
         mono = decompose(bucketize(g))
         _, rep = dc_kcore(g, thresholds=(t,), strategy="rough")
-        emit(f"fig8/{name}/monolithic", 0.0, f"comm={mono.comm_amount}")
+        emit(f"fig8/{name}/monolithic", 0.0,
+             f"comm={mono.comm_amount};work={mono.gathered_rows}")
         for p in rep.parts:
-            emit(f"fig8/{name}/part[{p.name}]", 0.0, f"comm={p.comm_amount}")
+            emit(f"fig8/{name}/part[{p.name}]", 0.0,
+                 f"comm={p.comm_amount};work={p.gathered_rows}")
         emit(f"fig8/{name}/dc-total", 0.0,
              f"comm={rep.total_comm};reduction={1 - rep.total_comm / max(mono.comm_amount,1):.2%}")
 
@@ -110,6 +116,31 @@ def fig9_divide_strategies():
         emit(f"fig9/{name}+{t}/rough", rough_s * 1e6, "")
         emit(f"fig9/{name}+{t}/exact", exact_s * 1e6,
              f"rough_speedup={exact_s / max(rough_s, 1e-9):.1f}x")
+
+
+def fig12_frontier_work():
+    """Work per iteration: active-frontier scheduling vs full sweeps.
+
+    Total gathered bucket rows across all sweeps, same fixed point. The
+    frontier must strictly reduce work on the power-law fixtures (the
+    acceptance gate for the scheduler)."""
+    for name, g, t in _graphs():
+        bg = bucketize(g)
+        front = decompose(bg)
+        full = decompose(bg, frontier=False)
+        assert (front.coreness == full.coreness).all()
+        saved = 1 - front.gathered_rows / max(full.gathered_rows, 1)
+        emit(f"fig12/{name}/full-sweeps", 0.0,
+             f"gathered_rows={full.gathered_rows};iters={full.iterations}")
+        emit(f"fig12/{name}/frontier", 0.0,
+             f"gathered_rows={front.gathered_rows};iters={front.iterations};"
+             f"saved={saved:.2%}")
+        assert front.gathered_rows < full.gathered_rows, name
+        # Divided: per-part work rides along in the reports.
+        _, rep = dc_kcore(g, thresholds=(t,), strategy="rough")
+        emit(f"fig12/{name}/dc-kcore", 0.0,
+             f"gathered_rows={rep.total_gathered_rows};"
+             f"full_sweep_rows={rep.total_full_sweep_rows}")
 
 
 def fig10_fig11_parts():
@@ -132,4 +163,5 @@ def run_all():
     fig8_comm_amount()
     fig9_divide_strategies()
     fig10_fig11_parts()
+    fig12_frontier_work()
     return ROWS

@@ -1,0 +1,114 @@
+"""JAX version-portability shims.
+
+The repo targets the current JAX API but must run on 0.4.x (the pinned
+container toolchain). Every version-dependent call site routes through this
+module so drift is repaired in exactly one place:
+
+* :func:`shard_map` — ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (0.4.x), mapping the
+  ``check_vma`` kwarg to the old ``check_rep`` name.
+* :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types`` only when
+  ``jax.sharding.AxisType`` exists (it does not on 0.4.37).
+* :func:`cost_analysis_dict` — ``Compiled.cost_analysis()`` returns a dict
+  on new JAX but a one-element list of dicts on 0.4.x; normalize to a dict.
+* :func:`optimization_barrier` — differentiable wrapper around
+  ``jax.lax.optimization_barrier`` (0.4.37 has no differentiation rule for
+  the primitive); the barrier is preserved on both the forward and backward
+  paths, which is exactly the placement the remat-stash fix needs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Resolve shard_map across JAX versions.
+
+    ``check_vma`` follows the new-API name; on 0.4.x it is forwarded as
+    ``check_rep`` (same semantics: static replication/varying-manual-axes
+    checking of the mapped outputs).
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        try:
+            return fn(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_vma,
+            )
+        except TypeError:
+            pass  # a version with jax.shard_map but the old kwarg name
+    else:
+        from jax.experimental.shard_map import shard_map as fn  # type: ignore
+    return fn(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence[Any]] = None,
+):
+    """Version-portable ``jax.make_mesh`` with Auto axis types when available.
+
+    On JAX versions with explicit-sharding support the mesh is built with
+    ``AxisType.Auto`` on every axis (the behavior the sharding policy
+    assumes); on 0.4.x — where ``jax.sharding.AxisType`` does not exist and
+    every axis is implicitly auto — the kwarg is simply omitted.
+    """
+    kwargs: Dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(axis_shapes), tuple(axis_names),
+                axis_types=(axis_type.Auto,) * len(tuple(axis_names)),
+                **kwargs,
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalized ``Compiled.cost_analysis()``: always a (possibly empty) dict.
+
+    JAX 0.4.x returns ``[{...}]`` (one entry per partition, len 1 post-SPMD);
+    newer versions return the dict directly; either may be ``None`` on
+    backends without cost analysis.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if len(ca) else {}
+    return dict(ca)
+
+
+@jax.custom_vjp
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` that is reverse-mode differentiable.
+
+    JAX 0.4.x has no differentiation rule for the primitive. The custom VJP
+    barriers the cotangent too: the backward-pass barrier is what actually
+    keeps XLA from hoisting the first-use f32 upcast out of the backward
+    scan (the residual-stash blowup the call sites guard against).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _ob_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _ob_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+optimization_barrier.defvjp(_ob_fwd, _ob_bwd)

@@ -16,7 +16,9 @@ parts (Section 5.6 evaluates 2-4):
 Parts are processed **sequentially**, so the peak device footprint is the
 max over parts instead of the whole graph — the paper's resource story. Per
 part we record nodes/edges/iterations/communication/peak bytes/extract and
-decompose times; these power every benchmark table (Figs 7-11, Table 3).
+decompose times, plus the frontier work metric (rows gathered per sweep vs
+the always-full-sweep baseline); these power every benchmark table
+(Figs 7-11, Table 3) and the work-per-iteration columns.
 """
 from __future__ import annotations
 
@@ -44,6 +46,11 @@ class PartReport:
     extract_time_s: float
     decompose_time_s: float
     finalized: int
+    # Work metric (active-frontier scheduling): rows actually gathered +
+    # h-indexed across all sweeps, vs what always-full sweeps would gather.
+    gathered_rows: int = 0
+    full_sweep_rows: int = 0
+    active_rows_per_iter: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -63,6 +70,16 @@ class DCKCoreReport:
     @property
     def total_iterations(self) -> int:
         return sum(p.iterations for p in self.parts)
+
+    @property
+    def total_gathered_rows(self) -> int:
+        """Total sweep work across parts (frontier-scheduled)."""
+        return sum(p.gathered_rows for p in self.parts)
+
+    @property
+    def total_full_sweep_rows(self) -> int:
+        """Work the always-full-sweep schedule would have done."""
+        return sum(p.full_sweep_rows for p in self.parts)
 
 
 DecomposeFn = Callable[[BucketedGraph], DecomposeResult]
@@ -136,6 +153,9 @@ def dc_kcore(
                 extract_time_s=extract_time,
                 decompose_time_s=res.wall_time_s,
                 finalized=int(final_local.sum()),
+                gathered_rows=res.gathered_rows,
+                full_sweep_rows=res.full_sweep_rows,
+                active_rows_per_iter=list(res.active_rows_per_iter),
             )
         )
 
@@ -167,6 +187,9 @@ def dc_kcore(
                 extract_time_s=0.0,
                 decompose_time_s=res.wall_time_s,
                 finalized=remaining_graph.n_nodes,
+                gathered_rows=res.gathered_rows,
+                full_sweep_rows=res.full_sweep_rows,
+                active_rows_per_iter=list(res.active_rows_per_iter),
             )
         )
 

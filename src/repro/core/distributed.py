@@ -25,6 +25,16 @@ Collective traffic is counted analytically per sweep (ring all-gather /
 reduce-scatter terms) by :func:`sweep_collective_bytes`; the paper's
 "communication amount" (changed estimates) is counted on-device like the
 single-device engine.
+
+Active-frontier sweep scheduling mirrors the single-device engine: the
+replicated frontier mask gates each bucket's gather, h-index, psum AND
+all_gather behind ``lax.cond`` (every device branches on the same
+replicated predicate), so both compute and collective bytes shrink with
+the frontier. Dirty bits are pushed at bucket granularity through the
+replicated ``node_tile`` map and unioned across the mesh by one
+[n_buckets] psum per sweep — no state-sized collective is ever added.
+The skip soundness argument is the same static bucket-adjacency bitmap +
+row-exact dirty-bit refinement documented in ``repro.core.decompose``.
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as compat_shard_map
 from repro.core.decompose import DecomposeResult
 from repro.core.hindex import hindex_of_sequence
 from repro.graph.structs import BucketedGraph
@@ -91,16 +102,21 @@ def shard_buckets(bg: BucketedGraph, plan: MeshPlan, wire_dtype=jnp.int32):
 
 
 def sweep_collective_bytes(bg: BucketedGraph, plan: MeshPlan, cand: int,
-                           wire_bytes: int = 4) -> int:
+                           wire_bytes: int = 4,
+                           active: Optional[np.ndarray] = None) -> int:
     """Analytic per-device ICI bytes of one sweep (ring algorithms).
 
     psum of [rows_loc, cand] int32 partials over the slot axes
     (2(m-1)/m ring all-reduce) plus all_gather of [rows_loc] estimates over
-    the node axes ((n-1)/n ring).
+    the node axes ((n-1)/n ring). ``active`` restricts the count to the
+    frontier's buckets — skipped buckets skip their collectives too, so
+    per-sweep collective bytes shrink with the frontier.
     """
     ns, ms = plan.n_node_shards, plan.n_slot_shards
     total = 0
-    for b in bg.buckets:
+    for bi, b in enumerate(bg.buckets):
+        if active is not None and not active[bi]:
+            continue
         rows = math.ceil(b.n_rows / ns) * ns
         rows_loc = rows // ns
         if ms > 1:
@@ -124,13 +140,27 @@ def _partial_counts(gathered, ext_rows, cand: int, cand_chunk: int = 256):
 
 
 def make_sweep_fn(plan: MeshPlan, cand: int, wire_dtype=jnp.int32,
-                  use_kernel: bool = False):
-    """Build the jitted shard_map sweep: (c, ext_pad, buckets) -> (c', changed).
+                  use_kernel: bool = False, frontier: bool = True):
+    """Build the jitted shard_map sweep:
+    ``(c, ext_pad, active, node_tile, buckets) -> (c', changed, dirty_next)``.
+
+    ``active`` is the replicated [n_buckets] bool frontier mask: inactive
+    buckets skip gather, h-index, AND their psum/all_gather behind
+    ``lax.cond`` — per-sweep collective bytes shrink with the frontier.
+    ``node_tile`` maps node id -> owning bucket ([n + 1], sentinel/deg-0
+    rows -> n_buckets). ``changed[i]`` counts rows of bucket ``i`` whose
+    estimate changed (replicated arithmetic, no extra collective);
+    ``dirty_next[j]`` is True iff some changed row has a neighbor in bucket
+    ``j`` — each device pushes shard-local dirty bits at bucket granularity
+    and one tiny [n_buckets] psum unions them across the mesh.
+    ``frontier=False`` (the always-full-sweep baseline) compiles the dirty
+    push and its psum out and returns an all-False ``dirty_next``.
 
     ``use_kernel=True`` computes the per-shard partial counts with the
     Pallas kernel (kernels/counts) instead of the pure-jnp path."""
     mesh = plan.mesh
     node_axes, slot_axes = plan.node_axes, plan.slot_axes
+    all_axes = tuple(node_axes) + tuple(slot_axes)
     rep = P()  # replicated
     row_p = P(node_axes)
     tile_p = P(node_axes, slot_axes)
@@ -142,27 +172,69 @@ def make_sweep_fn(plan: MeshPlan, cand: int, wire_dtype=jnp.int32,
             return partial_counts_op(gathered, ext_rows, cand=cand)
         return _partial_counts(gathered, ext_rows, cand)
 
-    def sweep(c, ext_pad, buckets):
+    def sweep(c, ext_pad, active, node_tile, buckets):
+        n_buckets = len(buckets)
+        sentinel = c.shape[0] - 1
         new_c = c
-        for ids_loc, neigh_loc in buckets:
-            gathered = new_c[neigh_loc].astype(jnp.int32)  # wire may be int16
-            ext_rows = ext_pad[ids_loc]
-            cnt = counts(gathered, ext_rows)
-            if plan.n_slot_shards > 1:
-                cnt = jax.lax.psum(cnt, slot_axes)
-            i = 1 + jnp.arange(cand, dtype=jnp.int32)
-            feasible = cnt >= i[None, :]
-            est = ext_rows + jnp.max(jnp.where(feasible, i[None, :], 0), axis=1)
-            est = est.astype(wire_dtype)
-            if plan.n_node_shards > 1:
-                est_full = jax.lax.all_gather(est, node_axes, tiled=True)
-                ids_full = jax.lax.all_gather(ids_loc, node_axes, tiled=True)
-            else:
-                est_full, ids_full = est, ids_loc
-            new_c = new_c.at[ids_full].set(est_full.astype(new_c.dtype))
-            new_c = new_c.at[-1].set(-1)
-        changed = jnp.sum((new_c != c)[:-1])
-        return new_c, changed
+        # Shard-local per-bucket dirty partials (slot n_buckets = dump row
+        # for sentinel-padded neighbors); unioned by one [nb] psum below.
+        tile_dirty = jnp.zeros((n_buckets + 1,), jnp.int32)
+        changed_parts = []
+        for bi, (ids_loc, neigh_loc) in enumerate(buckets):
+
+            def update(nc, td, ids_loc=ids_loc, neigh_loc=neigh_loc):
+                gathered = nc[neigh_loc].astype(jnp.int32)  # wire may be int16
+                ext_rows = ext_pad[ids_loc]
+                cnt = counts(gathered, ext_rows)
+                if plan.n_slot_shards > 1:
+                    cnt = jax.lax.psum(cnt, slot_axes)
+                i = 1 + jnp.arange(cand, dtype=jnp.int32)
+                feasible = cnt >= i[None, :]
+                est = ext_rows + jnp.max(jnp.where(feasible, i[None, :], 0), axis=1)
+                est = est.astype(wire_dtype)
+                # Push dirty bits: each changed local row marks the buckets
+                # owning its local neighbor slots (union across devices via
+                # the final psum). Work stays proportional to the frontier.
+                if frontier:
+                    row_changed = (est.astype(nc.dtype) != nc[ids_loc]) & (
+                        ids_loc != sentinel
+                    )
+                    td = td.at[node_tile[neigh_loc].astype(jnp.int32)].max(
+                        jnp.broadcast_to(
+                            row_changed[:, None], neigh_loc.shape
+                        ).astype(jnp.int32)
+                    )
+                if plan.n_node_shards > 1:
+                    est_full = jax.lax.all_gather(est, node_axes, tiled=True)
+                    ids_full = jax.lax.all_gather(ids_loc, node_axes, tiled=True)
+                else:
+                    est_full, ids_full = est, ids_loc
+                prev_full = nc[ids_full]
+                ch = jnp.sum(
+                    (est_full.astype(nc.dtype) != prev_full)
+                    & (ids_full != sentinel)
+                ).astype(jnp.int32)
+                nc = nc.at[ids_full].set(est_full.astype(nc.dtype))
+                nc = nc.at[-1].set(-1)
+                return nc, td, ch
+
+            new_c, tile_dirty, ch = jax.lax.cond(
+                active[bi],
+                update,
+                lambda nc, td: (nc, td, jnp.int32(0)),
+                new_c,
+                tile_dirty,
+            )
+            changed_parts.append(ch)
+        changed = (
+            jnp.stack(changed_parts)
+            if changed_parts
+            else jnp.zeros((0,), jnp.int32)
+        )
+        dirty_next = tile_dirty[:n_buckets]
+        if frontier and len(all_axes) > 0:
+            dirty_next = jax.lax.psum(dirty_next, all_axes)
+        return new_c, changed, dirty_next > 0
 
     def build(n_buckets: int):
         """shard_map needs exact pytree in_specs — build per bucket count.
@@ -171,16 +243,30 @@ def make_sweep_fn(plan: MeshPlan, cand: int, wire_dtype=jnp.int32,
         slot axes + all_gather over node axes before every scatter), but the
         static checker cannot see through the scatter."""
         return jax.jit(
-            jax.shard_map(
+            compat_shard_map(
                 sweep,
                 mesh=mesh,
-                in_specs=(rep, rep, [(row_p, tile_p)] * n_buckets),
-                out_specs=(rep, rep),
+                in_specs=(rep, rep, rep, rep, [(row_p, tile_p)] * n_buckets),
+                out_specs=(rep, rep, rep),
                 check_vma=False,
             )
         )
 
     return build
+
+
+def node_tile_map(bg: BucketedGraph) -> np.ndarray:
+    """[n + 1] node -> owning bucket; sentinel/deg-0 -> n_buckets.
+
+    int16 whenever the bucket count allows (it always does in practice:
+    buckets are degree classes x bounded row-tiles). At the paper's WX-136B
+    scale the replicated map is 2 bytes/node — the same budget class as the
+    int16 coreness wire, which is what keeps the divided parts inside the
+    16 GiB/chip feasibility story."""
+    nb = len(bg.buckets)
+    dtype = np.int16 if nb < np.iinfo(np.int16).max else np.int32
+    m = bg.node_bucket_map()
+    return np.where(m < 0, nb, m).astype(dtype)
 
 
 def decompose_distributed(
@@ -189,10 +275,11 @@ def decompose_distributed(
     *,
     wire_dtype=jnp.int32,
     use_kernel: bool = False,
+    frontier: bool = True,
     max_iter: Optional[int] = None,
 ) -> DecomposeResult:
     """Distributed fixed point; same contract as
-    :func:`repro.core.decompose.decompose`."""
+    :func:`repro.core.decompose.decompose` (including ``frontier``)."""
     n = bg.n_nodes
     t0 = time.time()
     cand = max(1, hindex_of_sequence(bg.degrees.astype(np.int64) + bg.ext))
@@ -212,27 +299,46 @@ def decompose_distributed(
         ),
         rep_sh,
     )
+    node_tile = jax.device_put(jnp.asarray(node_tile_map(bg)), rep_sh)
     buckets = shard_buckets(bg, plan, wire_dtype)
-    sweep = make_sweep_fn(plan, cand, wire_dtype, use_kernel)(len(buckets))
+    sweep = make_sweep_fn(plan, cand, wire_dtype, use_kernel, frontier)(len(buckets))
 
-    # Peak per-device bytes: sharded tiles + replicated state.
+    # Peak per-device bytes: sharded tiles + replicated state (coreness,
+    # ext, and the node -> bucket frontier map).
     ns, ms = plan.n_node_shards, plan.n_slot_shards
     tile_bytes = sum(int(ids.size * 4 / ns + neigh.size * 4 / (ns * ms)) for ids, neigh in buckets)
-    state_bytes = int(c.size * c.dtype.itemsize + ext_pad.size * 4)
+    state_bytes = int(
+        c.size * c.dtype.itemsize
+        + ext_pad.size * 4
+        + node_tile.size * node_tile.dtype.itemsize
+    )
     peak = tile_bytes + state_bytes
+
+    n_buckets = len(bg.buckets)
+    bucket_rows = np.array([b.n_rows for b in bg.buckets], dtype=np.int64)
+    adj = bg.bucket_adjacency()
+    active = np.ones(n_buckets, dtype=bool)
 
     limit = max_iter if max_iter is not None else max(4, n)
     comm_per_iter: List[int] = []
+    active_rows_per_iter: List[int] = []
     total = 0
     it = 0
     while it < limit:
-        c, changed = sweep(c, ext_pad, buckets)
-        changed = int(changed)
+        active_rows_per_iter.append(int(bucket_rows[active].sum()))
+        c, changed_vec, dirty_next = sweep(
+            c, ext_pad, jnp.asarray(active), node_tile, buckets
+        )
+        changed_vec = np.asarray(changed_vec)
+        changed = int(changed_vec.sum())
         comm_per_iter.append(changed)
         total += changed
         it += 1
         if changed == 0:
             break
+        if frontier:
+            reach = adj[changed_vec > 0].any(axis=0)
+            active = np.asarray(dirty_next) & reach
     coreness = np.asarray(c[:-1]).astype(np.int32)
     return DecomposeResult(
         coreness=coreness,
@@ -241,6 +347,8 @@ def decompose_distributed(
         comm_per_iter=comm_per_iter,
         peak_bytes=int(peak),
         wall_time_s=time.time() - t0,
+        active_rows_per_iter=active_rows_per_iter,
+        rows_per_full_sweep=bg.rows_per_full_sweep,
     )
 
 

@@ -78,10 +78,28 @@ def external_info(g: Graph, keep_mask: np.ndarray, upper_mask: np.ndarray) -> np
     return ext_full[keep_mask].astype(np.int32)
 
 
+def _tile_row_cap(n_rows: int, row_align: int, max_bucket_rows) -> int:
+    """Resolve the per-bucket row cap used for frontier granularity.
+
+    ``"auto"`` bounds the total tile count to roughly 48 (plus one per
+    degree class) so the unrolled sweep trace stays cheap while small/medium
+    parts still get fine-grained frontier scheduling; an int caps directly;
+    ``None`` disables splitting (one tile per degree class).
+    """
+    if max_bucket_rows is None:
+        return n_rows if n_rows > 0 else 1
+    if max_bucket_rows == "auto":
+        cap = max(128, -(-n_rows // 48))
+    else:
+        cap = int(max_bucket_rows)
+    return max(row_align, -(-cap // row_align) * row_align)
+
+
 def bucketize(
     g: Graph,
     ext: Optional[np.ndarray] = None,
     row_align: int = 8,
+    max_bucket_rows="auto",
 ) -> BucketedGraph:
     """Convert a CSR part into degree-bucketed padded dense tiles.
 
@@ -89,6 +107,11 @@ def bucketize(
     exactly ``ext`` at initialization and never changes. Bucket rows are
     padded to a multiple of ``row_align`` (sublane alignment; the distributed
     engine re-pads rows to a multiple of the node-shard count).
+
+    Each degree class is split into row-tiles of at most ``max_bucket_rows``
+    rows (see :func:`_tile_row_cap`); tiles are the scheduling unit of
+    active-frontier sweeps, so finer tiles mean more precise skipping. The
+    ``bucket_adj`` bitmap over tiles is recorded for the engines.
     """
     deg = g.degrees
     n = g.n_nodes
@@ -99,29 +122,54 @@ def bucketize(
         raise ValueError("ext shape mismatch")
 
     buckets = []
+    # node -> bucket index (sentinel slot n and degree-0 nodes map to -1).
+    node_bucket = np.full(n + 1, -1, dtype=np.int32)
     max_deg = int(deg.max(initial=0))
+    row_cap = _tile_row_cap(int((deg > 0).sum()), row_align, max_bucket_rows)
     if max_deg > 0:
         for lo_excl_idx, width in enumerate(_bucket_widths(max_deg)):
             lo = 0 if lo_excl_idx == 0 else width // 2
-            members = np.nonzero((deg > lo) & (deg <= width))[0]
-            if members.size == 0:
+            members_all = np.nonzero((deg > lo) & (deg <= width))[0]
+            if members_all.size == 0:
                 continue
-            nb = int(np.ceil(members.size / row_align) * row_align)
-            # Padded rows scatter into the sentinel slot `n` of the state
-            # vector (re-pinned to -1 after each update), never into a node.
-            node_ids = np.full(nb, n, dtype=np.int32)
-            node_ids[: members.size] = members
-            neigh = np.full((nb, width), n, dtype=np.int32)  # sentinel pad
-            row_deg = np.zeros(nb, dtype=np.int32)
-            row_deg[: members.size] = deg[members]
-            # Fill rows: gather each member's adjacency slice.
-            starts = g.indptr[members]
-            lens = deg[members]
-            flat_idx = (starts[:, None] + np.arange(width)[None, :]).astype(np.int64)
-            valid = np.arange(width)[None, :] < lens[:, None]
-            flat_idx = np.where(valid, flat_idx, 0)
-            vals = g.indices[flat_idx]
-            neigh[: members.size] = np.where(valid, vals, n)
-            buckets.append(Bucket(node_ids=node_ids, neigh=neigh, deg=row_deg, width=width))
+            for tile_lo in range(0, members_all.size, row_cap):
+                members = members_all[tile_lo : tile_lo + row_cap]
+                nb = int(np.ceil(members.size / row_align) * row_align)
+                # Padded rows scatter into the sentinel slot `n` of the state
+                # vector (re-pinned to -1 after each update), never into a node.
+                node_ids = np.full(nb, n, dtype=np.int32)
+                node_ids[: members.size] = members
+                neigh = np.full((nb, width), n, dtype=np.int32)  # sentinel pad
+                row_deg = np.zeros(nb, dtype=np.int32)
+                row_deg[: members.size] = deg[members]
+                # Fill rows: gather each member's adjacency slice.
+                starts = g.indptr[members]
+                lens = deg[members]
+                flat_idx = (starts[:, None] + np.arange(width)[None, :]).astype(np.int64)
+                valid = np.arange(width)[None, :] < lens[:, None]
+                flat_idx = np.where(valid, flat_idx, 0)
+                vals = g.indices[flat_idx]
+                neigh[: members.size] = np.where(valid, vals, n)
+                node_bucket[members] = len(buckets)
+                buckets.append(
+                    Bucket(node_ids=node_ids, neigh=neigh, deg=row_deg, width=width)
+                )
 
-    return BucketedGraph(n_nodes=n, buckets=buckets, ext=ext, degrees=deg.astype(np.int32))
+    # Bucket-adjacency bitmap for frontier scheduling. An endpoint of any
+    # edge has degree >= 1, so every real neighbor id maps to a bucket;
+    # sentinel-padded slots map to -1 and are dropped. Diagonal is kept set
+    # (conservative: a bucket that changed rescans itself next sweep) and the
+    # matrix is symmetrized — CSR symmetry makes it symmetric already, but
+    # padding asymmetries must never weaken the soundness argument.
+    nb = len(buckets)
+    adj = np.zeros((nb, nb), dtype=bool)
+    np.fill_diagonal(adj, True)
+    for bi, b in enumerate(buckets):
+        touched = np.unique(node_bucket[b.neigh.ravel()])
+        adj[bi, touched[touched >= 0]] = True
+    adj |= adj.T
+
+    return BucketedGraph(
+        n_nodes=n, buckets=buckets, ext=ext, degrees=deg.astype(np.int32),
+        bucket_adj=adj, node_bucket=node_bucket,
+    )

@@ -134,17 +134,53 @@ class BucketedGraph:
     (``0`` for a monolithic decomposition). ``n_nodes`` is the node count of
     the part; neighbor ids in buckets index into ``[0, n_nodes]`` where
     ``n_nodes`` is the padding sentinel.
+
+    ``bucket_adj`` is the symmetric ``[n_buckets, n_buckets]`` bool bitmap of
+    bucket adjacency: ``bucket_adj[i, j]`` iff some node in bucket ``i`` has
+    a neighbor in bucket ``j`` (diagonal always set). Computed once at
+    :func:`~repro.graph.build.bucketize` time, it makes active-frontier sweep
+    scheduling *sound*: a bucket whose own rows and whose adjacent buckets
+    were all quiescent last sweep cannot change this sweep, so the engines
+    skip its gather + h-index outright.
     """
 
     n_nodes: int
     buckets: List[Bucket]
     ext: np.ndarray  # [n_nodes] int32
     degrees: np.ndarray  # [n_nodes] int32, in-part degree
+    bucket_adj: Optional[np.ndarray] = None  # [n_buckets, n_buckets] bool
+    node_bucket: Optional[np.ndarray] = None  # [n_nodes + 1] int32, -1 = none
 
     def memory_bytes(self) -> int:
         return int(
             sum(b.memory_bytes() for b in self.buckets) + self.ext.nbytes + self.degrees.nbytes
         )
+
+    def bucket_adjacency(self) -> np.ndarray:
+        """The bucket-adjacency bitmap; all-True (always rescan every bucket,
+        the pre-frontier behavior) when none was recorded at build time."""
+        nb = len(self.buckets)
+        if self.bucket_adj is not None:
+            assert self.bucket_adj.shape == (nb, nb)
+            return self.bucket_adj
+        return np.ones((nb, nb), dtype=bool)
+
+    def node_bucket_map(self) -> np.ndarray:
+        """[n_nodes + 1] node -> owning bucket index (-1 for degree-0 nodes
+        and the sentinel slot). Recorded at bucketize time; derived from the
+        buckets when absent (hand-built instances)."""
+        if self.node_bucket is not None:
+            return self.node_bucket
+        m = np.full(self.n_nodes + 1, -1, dtype=np.int32)
+        for bi, b in enumerate(self.buckets):
+            real = b.node_ids[b.node_ids < self.n_nodes]
+            m[real] = bi
+        return m
+
+    @property
+    def rows_per_full_sweep(self) -> int:
+        """Bucket rows a full (non-frontier) sweep gathers, padding included."""
+        return int(sum(b.n_rows for b in self.buckets))
 
     @property
     def widths(self) -> Sequence[int]:

@@ -63,9 +63,12 @@ def main():
           f"(preprocess {report.preprocess_time_s:.2f}s)")
     print(f"k_max = {int(core.max())}, total comm = {report.total_comm:,} updates, "
           f"peak part bytes = {report.peak_bytes/2**20:.1f} MiB")
+    print(f"sweep work (frontier): {report.total_gathered_rows:,} gathered rows "
+          f"vs {report.total_full_sweep_rows:,} full-sweep rows")
     for p in report.parts:
         print(f"  part {p.name:>10}: n={p.n_nodes:>9,} m={p.n_edges:>11,} "
               f"iters={p.iterations:>3} comm={p.comm_amount:>10,} "
+              f"work={p.gathered_rows:>10,}/{p.full_sweep_rows:<10,} "
               f"finalized={p.finalized:,}")
     if args.check:
         t0 = time.time()

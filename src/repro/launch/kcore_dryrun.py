@@ -101,13 +101,19 @@ def build_specs_for(n: int, buckets, plan, wire_dtype, id_dtype):
         )
     c = jax.ShapeDtypeStruct((n + 1,), wire_dtype)
     ext = jax.ShapeDtypeStruct((n + 1,), jnp.int32)
-    return c, ext, bucket_specs
+    # Frontier plumbing: the mask models a full sweep (all buckets active)
+    # at compile time; node_tile is the replicated int16 node -> bucket map
+    # (bucket counts are tiny; 2 bytes/node, same class as the int16 wire).
+    active = jax.ShapeDtypeStruct((len(bucket_specs),), jnp.bool_)
+    node_tile = jax.ShapeDtypeStruct((n + 1,), jnp.int16)
+    return c, ext, active, node_tile, bucket_specs
 
 
 def run_case(name, n, m, cand, wire, multi_pod=True, tag=""):
     import jax
     import jax.numpy as jnp
 
+    from repro.compat import cost_analysis_dict
     from repro.core.distributed import MeshPlan, make_sweep_fn
     from repro.launch.mesh import make_production_mesh
     from repro.roofline import hw
@@ -125,7 +131,8 @@ def run_case(name, n, m, cand, wire, multi_pod=True, tag=""):
     wire_bytes = 2 if wire == "int16" else 4
     slots = sum(r * max(8, w) for w, r in buckets)
     tiles_dev = slots * id_bytes / mesh.size
-    state_dev = (n + 1) * (wire_bytes + 2)  # coreness (wire) + ext (int16)
+    # coreness (wire) + ext (int16) + frontier node->bucket map (int16)
+    state_dev = (n + 1) * (wire_bytes + 2 + 2)
     total_dev = tiles_dev + state_dev + 512 * 2**20
     fits = total_dev < hw.HBM_BYTES
     rec = {
@@ -157,15 +164,17 @@ def run_case(name, n, m, cand, wire, multi_pod=True, tag=""):
         _dump(rec)
         return rec
 
-    c, ext, bucket_specs = build_specs_for(n, buckets, plan, wire_dtype, id_dtype)
+    c, ext, active, node_tile, bucket_specs = build_specs_for(
+        n, buckets, plan, wire_dtype, id_dtype
+    )
     sweep = make_sweep_fn(plan, cand, wire_dtype)(len(bucket_specs))
     t0 = time.time()
     with mesh:
-        lowered = sweep.lower(c, ext, bucket_specs)
+        lowered = sweep.lower(c, ext, active, node_tile, bucket_specs)
         compiled = lowered.compile()
     rec["compile_s"] = round(time.time() - t0, 1)
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     rl = roofline_terms(
         float(cost.get("flops", 0.0)),

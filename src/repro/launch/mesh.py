@@ -3,6 +3,10 @@
 Defined as FUNCTIONS so importing this module never touches jax device
 state (the dry-run must set XLA_FLAGS before any device query).
 
+All mesh construction routes through :func:`repro.compat.make_mesh`, the
+version-portable helper (``axis_types=Auto`` where supported, omitted on
+JAX 0.4.x which has no ``jax.sharding.AxisType``).
+
 Single pod: 16x16 = 256 v5e chips, axes ("data", "model").
 Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
 "pod" axis carries only data parallelism (gradient all-reduce), keeping
@@ -10,22 +14,16 @@ cross-pod (DCN-class) traffic minimal.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for_devices(n: int, model_parallel: int = 1, axis_names=("data", "model")):
     """Small helper for tests / examples on N local (virtual) devices."""
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel),
-        axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // model_parallel, model_parallel), axis_names)

@@ -46,6 +46,13 @@ _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _COMP_START_RE = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\{\s*$")
 _WHILE_RE = re.compile(r"while\(.*?condition=(%[\w\.\-]+),\s*body=(%[\w\.\-]+)")
 _TRIP_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+# conditional(...) branches: `branch_computations={%a, %b}` (new HLO) or
+# `true_computation=%a, false_computation=%b` (older text form).
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_FALSE_RE = re.compile(
+    r"true_computation=(%[\w\.\-]+),\s*false_computation=(%[\w\.\-]+)"
+)
+_COMP_NAME_RE = re.compile(r"%[\w\.\-]+")
 
 
 def split_computations(hlo_text: str):
@@ -75,7 +82,12 @@ def loop_multipliers(hlo_text: str) -> Dict[str, float]:
     XLA's cost_analysis (and a naive text scan) counts a while body ONCE;
     real execution repeats it trip-count times. The scan trip count is the
     s32 constant in the while's condition computation (the loop bound the
-    counter is compared against)."""
+    counter is compared against).
+
+    ``conditional`` branch computations inherit the caller's multiplier
+    (an at-most-once upper bound per call — the frontier-gated k-core sweep
+    puts its collectives inside ``lax.cond`` branches, and dropping them
+    would zero the collective term of the roofline)."""
     comps, entry = split_computations(hlo_text)
     if entry is None:
         return {}
@@ -105,6 +117,18 @@ def loop_multipliers(hlo_text: str) -> Dict[str, float]:
                     m_new = mult[name] * trips_of(cond)
                     if m_new > mult.get(body, 0.0):
                         mult[body] = m_new
+                        changed = True
+                branches = []
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    branches = _COMP_NAME_RE.findall(bm.group(1))
+                else:
+                    tf = _TRUE_FALSE_RE.search(line)
+                    if tf:
+                        branches = [tf.group(1), tf.group(2)]
+                for br in branches:
+                    if mult[name] > mult.get(br, 0.0):
+                        mult[br] = mult[name]
                         changed = True
     return mult
 

@@ -28,6 +28,11 @@ bg = bucketize(g)
 res = decompose_distributed(bg, plan)
 np.testing.assert_array_equal(res.coreness, peel_coreness(g))
 assert res.comm_per_iter[-1] == 0
+# Always-full-sweep baseline: same fixed point, no less work than frontier.
+base = decompose_distributed(bg, plan, frontier=False)
+np.testing.assert_array_equal(base.coreness, res.coreness)
+assert len(res.active_rows_per_iter) == res.iterations
+assert res.gathered_rows <= base.gathered_rows == base.full_sweep_rows
 print("OK iterations=", res.iterations)
 """,
         n_devices=8,
@@ -107,7 +112,13 @@ assert b > 0
 # int16 wire halves only the all-gather term.
 b16 = sweep_collective_bytes(bg, plan, cand=16, wire_bytes=2)
 assert b16 < b
-print("OK", b, b16)
+# Frontier mask: quiescent buckets skip their collectives entirely.
+act = np.zeros(len(bg.buckets), dtype=bool)
+act[:2] = True
+b_act = sweep_collective_bytes(bg, plan, cand=16, active=act)
+assert 0 < b_act < b
+assert sweep_collective_bytes(bg, plan, cand=16, active=~act) + b_act == b
+print("OK", b, b16, b_act)
 """,
         n_devices=8,
     )

@@ -7,7 +7,8 @@ _SAVE = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.ckpt import save_pytree
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 w = jax.device_put(jnp.arange(64*32, dtype=jnp.float32).reshape(64, 32),
                    NamedSharding(mesh, P("data", "model")))
 b = jax.device_put(jnp.ones((32,), jnp.float32), NamedSharding(mesh, P("model")))
@@ -19,8 +20,9 @@ _RESTORE = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.ckpt import restore_pytree
+from repro.compat import make_mesh
 assert len(jax.devices()) == 4
-mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ("data", "model"))
 template = {"w": np.zeros((64, 32), np.float32), "b": np.zeros((32,), np.float32)}
 shardings = {"w": NamedSharding(mesh, P("data", "model")),
              "b": NamedSharding(mesh, P("model"))}

@@ -10,7 +10,13 @@ Property tests (hypothesis) pin the paper's invariants:
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; seeded ports of the key properties "
+    "run in tests/test_kcore_properties.py",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.decompose import decompose
 from repro.core.dckcore import dc_kcore

@@ -1,0 +1,184 @@
+"""Seeded (hypothesis-free) ports of the k-core property tests, plus the
+active-frontier sweep-scheduling invariants.
+
+The hypothesis suites in test_kcore_core.py / test_kernels_hindex.py skip
+when hypothesis is not installed; the highest-value properties are ported
+here to seeded ``numpy.random`` parametrized tests so the paper's
+invariants stay covered offline:
+
+  * Algorithm 2 vectorized forms == literal scalar transcription.
+  * decompose(monolithic, any schedule) == BZ peeling oracle.
+  * dc_kcore(any thresholds, either strategy) == oracle (divide-invariance).
+  * monotonicity: adding edges never decreases coreness.
+
+Frontier invariants pinned here:
+
+  * frontier schedule returns coreness identical to full sweeps (all ops);
+  * the bucket-adjacency bitmap covers every edge (the soundness
+    certificate for skipping);
+  * per-sweep active-row counts are exposed and never exceed a full sweep,
+  * and total gathered rows never exceed the always-full-sweep baseline.
+"""
+import numpy as np
+import pytest
+
+from repro.core.decompose import decompose
+from repro.core.dckcore import dc_kcore
+from repro.core.hindex import hindex_brute, hindex_count, hindex_sorted
+from repro.graph.build import bucketize
+from repro.graph.oracle import peel_coreness
+from repro.graph.structs import Graph
+
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- #
+# H-index operator agreement (port of test_hindex_forms_agree)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(40))
+def test_hindex_forms_agree_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n_cores = int(rng.integers(0, 25))
+    pad = int(rng.integers(0, 9))
+    ext = int(rng.integers(0, 13))
+    cores = rng.integers(0, 41, size=n_cores).tolist()
+    row = np.array(cores + [-1] * pad, dtype=np.int32).reshape(1, -1)
+    if row.shape[1] == 0:
+        row = np.full((1, 1), -1, dtype=np.int32)
+    e = jnp.array([ext], dtype=jnp.int32)
+    expect = hindex_brute(row[0], ext)
+    assert int(hindex_sorted(jnp.asarray(row), e)[0]) == expect
+    assert int(hindex_count(jnp.asarray(row), e, cand_chunk=7)[0]) == expect
+
+
+# --------------------------------------------------------------------- #
+# decompose(random graph) == oracle (port of test_decompose_random_graphs)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(15))
+def test_decompose_random_graphs_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 61))
+    m = int(rng.integers(0, 3 * n + 1))
+    g = Graph.from_edges(
+        rng.integers(0, n, size=m), rng.integers(0, n, size=m), n_nodes=n
+    )
+    res = decompose(bucketize(g))
+    np.testing.assert_array_equal(res.coreness, peel_coreness(g))
+
+
+# --------------------------------------------------------------------- #
+# Divide-invariance (port of test_dckcore_divide_invariance)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", ["rough", "exact"])
+@pytest.mark.parametrize("seed", range(6))
+def test_dckcore_divide_invariance_seeded(seed, strategy):
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(3, 51))
+    m = int(rng.integers(1, 3 * n + 1))
+    thresholds = rng.integers(1, 13, size=int(rng.integers(1, 4))).tolist()
+    g = Graph.from_edges(
+        rng.integers(0, n, size=m), rng.integers(0, n, size=m), n_nodes=n
+    )
+    core, _ = dc_kcore(g, thresholds=thresholds, strategy=strategy)
+    np.testing.assert_array_equal(core, peel_coreness(g))
+
+
+# --------------------------------------------------------------------- #
+# Monotonicity (port of test_monotone_under_edge_addition)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(8))
+def test_monotone_under_edge_addition_seeded(seed):
+    rng = np.random.default_rng(200 + seed)
+    n = int(rng.integers(4, 41))
+    m = int(rng.integers(2, 2 * n + 1))
+    extra = int(rng.integers(1, n + 1))
+    src = rng.integers(0, n, size=m + extra)
+    dst = rng.integers(0, n, size=m + extra)
+    g1 = Graph.from_edges(src[:m], dst[:m], n_nodes=n)
+    g2 = Graph.from_edges(src, dst, n_nodes=n)
+    c1 = decompose(bucketize(g1)).coreness
+    c2 = decompose(bucketize(g2)).coreness
+    assert (c2 >= c1).all()
+
+
+# --------------------------------------------------------------------- #
+# Active-frontier scheduling invariants
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("op", ["sorted", "count", "kernel"])
+def test_frontier_schedule_exact_and_no_more_work(rmat_graph, op):
+    bg = bucketize(rmat_graph)
+    oracle = peel_coreness(rmat_graph)
+    front = decompose(bg, op=op)
+    full = decompose(bg, op=op, frontier=False)
+    np.testing.assert_array_equal(front.coreness, oracle)
+    np.testing.assert_array_equal(full.coreness, oracle)
+    # Work metric exposed, bounded per sweep, and no worse in total.
+    assert len(front.active_rows_per_iter) == front.iterations
+    assert front.rows_per_full_sweep == bg.rows_per_full_sweep
+    assert all(0 <= a <= bg.rows_per_full_sweep for a in front.active_rows_per_iter)
+    assert front.gathered_rows <= full.gathered_rows
+    assert full.gathered_rows == full.full_sweep_rows
+    # Power-law fixture: the frontier must actually skip work.
+    assert front.gathered_rows < full.gathered_rows
+
+
+def test_frontier_reduces_work_jacobi(rmat_graph):
+    bg = bucketize(rmat_graph)
+    oracle = peel_coreness(rmat_graph)
+    front = decompose(bg, gauss_seidel=False)
+    full = decompose(bg, gauss_seidel=False, frontier=False)
+    np.testing.assert_array_equal(front.coreness, oracle)
+    np.testing.assert_array_equal(full.coreness, oracle)
+    assert front.gathered_rows < full.gathered_rows
+
+
+def test_bucket_adjacency_covers_every_edge(rmat_graph):
+    """Soundness certificate: for every edge (u, v), the buckets owning u
+    and v are marked adjacent, so a change at u can always re-activate v."""
+    bg = bucketize(rmat_graph)
+    adj = bg.bucket_adjacency()
+    n = bg.n_nodes
+    node_bucket = np.full(n, -1, dtype=np.int64)
+    for bi, b in enumerate(bg.buckets):
+        real = b.node_ids[b.node_ids < n]
+        node_bucket[real] = bi
+    deg = rmat_graph.degrees
+    src = np.repeat(np.arange(n), deg)
+    dst = rmat_graph.indices
+    bs, bd = node_bucket[src], node_bucket[dst]
+    assert (bs >= 0).all() and (bd >= 0).all()
+    assert adj[bs, bd].all()
+    assert (adj == adj.T).all()
+    assert adj.diagonal().all()
+
+
+def test_bucket_tiles_partition_nodes(rmat_graph):
+    """Row tiles partition the positive-degree nodes exactly once."""
+    bg = bucketize(rmat_graph)
+    n = bg.n_nodes
+    seen = np.zeros(n, dtype=np.int64)
+    for b in bg.buckets:
+        real = b.node_ids[b.node_ids < n]
+        np.add.at(seen, real, 1)
+    deg = rmat_graph.degrees
+    assert (seen[deg > 0] == 1).all()
+    assert (seen[deg == 0] == 0).all()
+
+
+def test_dckcore_reports_work_metric(rmat_graph):
+    core, report = dc_kcore(rmat_graph, thresholds=(8,), strategy="rough")
+    np.testing.assert_array_equal(core, peel_coreness(rmat_graph))
+    assert report.total_gathered_rows > 0
+    assert report.total_gathered_rows <= report.total_full_sweep_rows
+    for p in report.parts:
+        assert len(p.active_rows_per_iter) == p.iterations
+        assert p.gathered_rows == sum(p.active_rows_per_iter)
+
+
+def test_frontier_resume_from_snapshot(rmat_graph):
+    """Frontier scheduling composes with warm restart (init_coreness)."""
+    bg = bucketize(rmat_graph)
+    snap = {}
+    decompose(bg, max_iter=3, on_sweep=lambda it, c: snap.update(c=np.asarray(c)))
+    res = decompose(bg, init_coreness=snap["c"])
+    np.testing.assert_array_equal(res.coreness, peel_coreness(rmat_graph))

@@ -5,7 +5,13 @@ Every configuration is validated against the pure-jnp oracle ``ref.py``
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; seeded ports of the key properties "
+    "run in tests/test_kcore_properties.py",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.decompose import decompose
 from repro.core.hindex import hindex_brute, hindex_of_sequence
