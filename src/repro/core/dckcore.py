@@ -31,6 +31,7 @@ import numpy as np
 from repro.core.decompose import DecomposeResult, decompose
 from repro.core.divide import timed_candidates
 from repro.graph.build import bucketize, external_info, induced_subgraph
+from repro.graph.reorder import bitmap_density, reorder_graph
 from repro.graph.structs import BucketedGraph, Graph
 
 
@@ -51,6 +52,13 @@ class PartReport:
     gathered_rows: int = 0
     full_sweep_rows: int = 0
     active_rows_per_iter: List[int] = dataclasses.field(default_factory=list)
+    # Measured per-device collective bytes across the part's sweeps (0 for
+    # the single-device engine — it issues no collectives).
+    collective_bytes: int = 0
+    # Fraction of set bits in the part's bucket-adjacency bitmap: how often
+    # the static frontier filter could NOT rule out a tile (lower = sparser
+    # = locality-aware reordering worked).
+    bitmap_density: float = 1.0
 
 
 @dataclasses.dataclass
@@ -81,6 +89,11 @@ class DCKCoreReport:
         """Work the always-full-sweep schedule would have done."""
         return sum(p.full_sweep_rows for p in self.parts)
 
+    @property
+    def total_collective_bytes(self) -> int:
+        """Measured per-device collective bytes summed over all parts."""
+        return sum(p.collective_bytes for p in self.parts)
+
 
 DecomposeFn = Callable[[BucketedGraph], DecomposeResult]
 
@@ -91,6 +104,8 @@ def dc_kcore(
     strategy: str = "rough",
     decompose_fn: Optional[DecomposeFn] = None,
     row_align: int = 8,
+    reorder: str = "identity",
+    max_bucket_rows="auto",
 ) -> tuple[np.ndarray, DCKCoreReport]:
     """Run DC-kCore. ``thresholds=()`` degenerates to the monolithic baseline
     (= the PSGraph competitor in the paper's tables).
@@ -98,6 +113,16 @@ def dc_kcore(
     ``decompose_fn`` lets callers swap the conquer engine (single-device jit,
     Pallas-kernel, or the distributed shard_map engine) without touching the
     divide/merge logic.
+
+    ``reorder`` (``"identity"`` / ``"bfs"`` / ``"rcm"``) applies a
+    locality-aware node ordering to *each part* before bucketizing it: the
+    part's tiles then see co-located neighbor ids, the bucket-adjacency
+    bitmap gets sparser, and the static frontier filter starts paying off.
+    Purely a layout decision — the permutation is carried on the
+    ``BucketedGraph`` and the engines report coreness in part-local original
+    ids, so divide/merge is untouched. ``max_bucket_rows`` is forwarded to
+    :func:`~repro.graph.build.bucketize` (``"auto"`` = the degree-profile
+    tile autotuner).
     """
     if decompose_fn is None:
         decompose_fn = lambda bg: decompose(bg)  # noqa: E731
@@ -116,12 +141,17 @@ def dc_kcore(
     preprocess = 0.0
 
     def run_part(part_g: Graph, part_ext: np.ndarray, name: str,
-                 threshold: Optional[int], extract_time: float) -> DecomposeResult:
+                 threshold: Optional[int], extract_time: float):
         nonlocal preprocess
         t0 = time.time()
-        bg = bucketize(part_g, ext=part_ext, row_align=row_align)
+        # Reorder the part, not the whole graph: each part is a fresh id
+        # space, and locality only has to hold within the tiles actually
+        # decomposed together. part_ext stays in part-local original order;
+        # bucketize permutes it in and the engine un-permutes coreness out.
+        bg = bucketize(reorder_graph(part_g, reorder), ext=part_ext,
+                       row_align=row_align, max_bucket_rows=max_bucket_rows)
         preprocess += (time.time() - t0) + extract_time
-        return decompose_fn(bg)
+        return decompose_fn(bg), bitmap_density(bg)
 
     for t in thresholds:
         cand_mask, extract_time = timed_candidates(remaining_graph, ext_full, t, strategy)
@@ -132,7 +162,7 @@ def dc_kcore(
         part_ext = ext_full[cand_mask]
         extract_time += time.time() - t_ext0
 
-        res = run_part(part_g, part_ext, f"core>={t}", t, extract_time)
+        res, density = run_part(part_g, part_ext, f"core>={t}", t, extract_time)
 
         # Finalize nodes that resolved at >= t (all of them for Exact-Divide).
         final_local = res.coreness >= t
@@ -156,6 +186,8 @@ def dc_kcore(
                 gathered_rows=res.gathered_rows,
                 full_sweep_rows=res.full_sweep_rows,
                 active_rows_per_iter=list(res.active_rows_per_iter),
+                collective_bytes=res.collective_bytes,
+                bitmap_density=density,
             )
         )
 
@@ -173,7 +205,7 @@ def dc_kcore(
 
     # Final (bottom) part: everything left.
     if remaining_graph.n_nodes > 0:
-        res = run_part(remaining_graph, ext_full, "rest", None, 0.0)
+        res, density = run_part(remaining_graph, ext_full, "rest", None, 0.0)
         coreness[remaining_ids] = res.coreness
         parts.append(
             PartReport(
@@ -190,6 +222,8 @@ def dc_kcore(
                 gathered_rows=res.gathered_rows,
                 full_sweep_rows=res.full_sweep_rows,
                 active_rows_per_iter=list(res.active_rows_per_iter),
+                collective_bytes=res.collective_bytes,
+                bitmap_density=density,
             )
         )
 

@@ -61,7 +61,12 @@ from repro.graph.structs import BucketedGraph
 
 @dataclasses.dataclass
 class DecomposeResult:
-    """Outcome of one part decomposition."""
+    """Outcome of one part decomposition.
+
+    ``coreness`` is always reported in **original**-id order: engines
+    running on a reordered layout (``BucketedGraph.perm`` set) gather
+    ``coreness[inv_perm]`` before returning, so reordering never leaks.
+    """
 
     coreness: np.ndarray  # [n_nodes] int32
     iterations: int
@@ -73,6 +78,13 @@ class DecomposeResult:
     # sweep, and what one always-full sweep would have gathered.
     active_rows_per_iter: List[int] = dataclasses.field(default_factory=list)
     rows_per_full_sweep: int = 0
+    # Measured collective traffic (distributed engine): per-device ICI bytes
+    # the sweep's collectives actually moved each iteration, from the live
+    # frontier mask and the padded device-array shapes — including the
+    # frontier's own dirty-bit psum, which the analytic
+    # ``sweep_collective_bytes`` model omits. Empty for single-device runs
+    # (they issue no collectives).
+    collective_bytes_per_iter: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def gathered_rows(self) -> int:
@@ -83,6 +95,11 @@ class DecomposeResult:
     def full_sweep_rows(self) -> int:
         """Rows the always-full-sweep schedule would have gathered."""
         return int(self.rows_per_full_sweep * self.iterations)
+
+    @property
+    def collective_bytes(self) -> int:
+        """Total measured per-device collective bytes across all sweeps."""
+        return int(sum(self.collective_bytes_per_iter))
 
 
 def _device_buckets(bg: BucketedGraph):
@@ -194,16 +211,24 @@ def decompose(
     (fixed-point iterations are restartable from ANY valid upper bound of
     the true coreness — the fault-tolerance hook for the paper's 27.5h-scale
     runs); ``on_sweep(iteration, coreness_view)`` is the snapshot callback.
+
+    If ``bg`` was built from a reordered graph (``bg.perm`` set), the
+    reordering is invisible here: ``init_coreness`` is taken in original-id
+    order and permuted in, ``on_sweep`` views and the returned ``coreness``
+    are permuted back — a snapshot taken under one ordering restarts
+    correctly under any other.
     """
     n = bg.n_nodes
     t0 = time.time()
     ext = jnp.asarray(bg.ext, dtype=jnp.int32)
     ext_pad = jnp.concatenate([ext, jnp.zeros((1,), jnp.int32)])
-    start = (
-        jnp.asarray(init_coreness, jnp.int32)
-        if init_coreness is not None
-        else jnp.asarray(bg.degrees, jnp.int32) + ext
-    )
+    if init_coreness is not None:
+        start = np.asarray(init_coreness)
+        if bg.perm is not None:
+            start = start[bg.perm]  # original-id order -> layout order
+        start = jnp.asarray(start, jnp.int32)
+    else:
+        start = jnp.asarray(bg.degrees, jnp.int32) + ext
     c = jnp.concatenate([start, jnp.full((1,), -1, jnp.int32)])
     buckets = _device_buckets(bg)
     # Candidate-window bound (exact; see hindex_of_sequence docstring).
@@ -235,7 +260,10 @@ def decompose(
         total += changed
         it += 1
         if on_sweep is not None:
-            on_sweep(it, c[:-1])
+            view = c[:-1]
+            if bg.inv_perm is not None:
+                view = view[jnp.asarray(bg.inv_perm)]  # -> original-id order
+            on_sweep(it, view)
         if changed == 0:
             break
         if frontier:
@@ -245,6 +273,8 @@ def decompose(
             reach = adj[changed_vec > 0].any(axis=0)
             active = np.asarray(dirty_next) & reach
     coreness = np.asarray(c[:-1])
+    if bg.inv_perm is not None:
+        coreness = coreness[bg.inv_perm]  # layout order -> original-id order
     return DecomposeResult(
         coreness=coreness,
         iterations=it,

@@ -104,13 +104,30 @@ def shard_buckets(bg: BucketedGraph, plan: MeshPlan, wire_dtype=jnp.int32):
 def sweep_collective_bytes(bg: BucketedGraph, plan: MeshPlan, cand: int,
                            wire_bytes: int = 4,
                            active: Optional[np.ndarray] = None) -> int:
-    """Analytic per-device ICI bytes of one sweep (ring algorithms).
+    """Analytic per-device ICI bytes of one sweep (ring-algorithm model).
 
-    psum of [rows_loc, cand] int32 partials over the slot axes
-    (2(m-1)/m ring all-reduce) plus all_gather of [rows_loc] estimates over
-    the node axes ((n-1)/n ring). ``active`` restricts the count to the
-    frontier's buckets — skipped buckets skip their collectives too, so
-    per-sweep collective bytes shrink with the frontier.
+    Two collective terms per *active* bucket:
+
+    * psum of the ``[rows_loc, cand]`` int32 count partials over the slot
+      axes — a ring all-reduce moves ``2 (m-1)/m`` of the operand per
+      device (``m`` = slot shards);
+    * all_gather of the ``[rows_loc]`` estimates over the node axes — a
+      ring all-gather moves ``(n-1)`` local shards per device (``n`` =
+      node shards), each ``wire_bytes`` wide (int16 wire halves exactly
+      this term).
+
+    ``active`` restricts the count to the frontier's buckets — skipped
+    buckets skip their collectives too, so per-sweep collective bytes
+    shrink with the frontier.
+
+    This is the *planning* model: it works from ``bg`` alone (no device
+    arrays needed), which is what the dry-run feasibility tables use at
+    the paper's 136B-edge scales. It deliberately excludes the frontier's
+    own [n_buckets] dirty-bit psum. The *measured* counterpart — computed
+    per iteration from the live frontier mask and the actual padded device
+    shapes, dirty psum included — is :func:`measured_sweep_bytes`, which
+    :func:`decompose_distributed` records into
+    ``DecomposeResult.collective_bytes_per_iter``.
     """
     ns, ms = plan.n_node_shards, plan.n_slot_shards
     total = 0
@@ -123,6 +140,46 @@ def sweep_collective_bytes(bg: BucketedGraph, plan: MeshPlan, cand: int,
             total += int(2 * (ms - 1) / ms * rows_loc * cand * 4)
         if ns > 1:
             total += int((ns - 1) * rows_loc * wire_bytes)
+    return total
+
+
+def measured_sweep_bytes(dev_buckets, plan: MeshPlan, cand: int,
+                         wire_bytes: int, active: np.ndarray,
+                         frontier: bool) -> int:
+    """Per-device ICI bytes one sweep actually moves, from live state.
+
+    Unlike the analytic :func:`sweep_collective_bytes` model this reads the
+    *device* bucket arrays (whose rows :func:`shard_buckets` re-padded to
+    the node-shard multiple), takes the actual per-iteration frontier mask,
+    and counts two terms the analytic model omits:
+
+    * the int32 ``ids_loc`` all_gather each active bucket issues alongside
+      its estimate gather (node ids are re-gathered transiently every
+      sweep rather than replicated — keeping them resident would put the
+      whole row-id vector back into per-device HBM, the budget the divide
+      step exists to cap);
+    * the frontier's [n_buckets] dirty-bit psum over the whole mesh (a
+      ``2 (k-1)/k`` ring all-reduce, ``k`` = mesh size).
+
+    This is the counter :func:`decompose_distributed` accumulates per
+    iteration into ``DecomposeResult.collective_bytes_per_iter``.
+    """
+    ns, ms = plan.n_node_shards, plan.n_slot_shards
+    total = 0
+    for bi, (ids, _neigh) in enumerate(dev_buckets):
+        if not active[bi]:
+            continue
+        rows_loc = ids.shape[0] // ns
+        if ms > 1:
+            total += int(2 * (ms - 1) / ms * rows_loc * cand * 4)
+        if ns > 1:
+            # est_full (wire dtype) + ids_full (int32) ring all-gathers.
+            total += int((ns - 1) * rows_loc * (wire_bytes + 4))
+    k = ns * ms
+    if frontier and k > 1:
+        # dirty_next psum: [n_buckets] int32 over every mesh axis; runs
+        # whenever the frontier sweep runs, active or not.
+        total += int(2 * (k - 1) / k * len(dev_buckets) * 4)
     return total
 
 
@@ -319,13 +376,18 @@ def decompose_distributed(
     adj = bg.bucket_adjacency()
     active = np.ones(n_buckets, dtype=bool)
 
+    wire_bytes = jnp.dtype(wire_dtype).itemsize
     limit = max_iter if max_iter is not None else max(4, n)
     comm_per_iter: List[int] = []
     active_rows_per_iter: List[int] = []
+    collective_bytes_per_iter: List[int] = []
     total = 0
     it = 0
     while it < limit:
         active_rows_per_iter.append(int(bucket_rows[active].sum()))
+        collective_bytes_per_iter.append(
+            measured_sweep_bytes(buckets, plan, cand, wire_bytes, active, frontier)
+        )
         c, changed_vec, dirty_next = sweep(
             c, ext_pad, jnp.asarray(active), node_tile, buckets
         )
@@ -340,6 +402,8 @@ def decompose_distributed(
             reach = adj[changed_vec > 0].any(axis=0)
             active = np.asarray(dirty_next) & reach
     coreness = np.asarray(c[:-1]).astype(np.int32)
+    if bg.inv_perm is not None:
+        coreness = coreness[bg.inv_perm]  # layout order -> original-id order
     return DecomposeResult(
         coreness=coreness,
         iterations=it,
@@ -349,6 +413,7 @@ def decompose_distributed(
         wall_time_s=time.time() - t0,
         active_rows_per_iter=active_rows_per_iter,
         rows_per_full_sweep=bg.rows_per_full_sweep,
+        collective_bytes_per_iter=collective_bytes_per_iter,
     )
 
 

@@ -5,14 +5,22 @@ degree-bucketed padded adjacency tiles (``BucketedGraph``) built by
 :mod:`repro.graph.build` for MXU/VPU-friendly dense compute.
 """
 from repro.graph.structs import Graph, BucketedGraph, Bucket
-from repro.graph.build import bucketize, induced_subgraph, external_info
+from repro.graph.build import autotune_tile_caps, bucketize, induced_subgraph, external_info
 from repro.graph.generators import erdos_renyi, barabasi_albert, rmat
 from repro.graph.oracle import peel_coreness, nx_coreness
+from repro.graph.reorder import (
+    REORDER_METHODS,
+    bfs_order,
+    bitmap_density,
+    rcm_order,
+    reorder_graph,
+)
 
 __all__ = [
     "Graph",
     "BucketedGraph",
     "Bucket",
+    "autotune_tile_caps",
     "bucketize",
     "induced_subgraph",
     "external_info",
@@ -21,4 +29,9 @@ __all__ = [
     "rmat",
     "peel_coreness",
     "nx_coreness",
+    "REORDER_METHODS",
+    "bfs_order",
+    "bitmap_density",
+    "rcm_order",
+    "reorder_graph",
 ]

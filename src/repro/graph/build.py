@@ -7,11 +7,13 @@ These are the host-side preprocessing steps of DC-kCore:
 * :func:`external_info` implements Definition 3 of the paper:
   ``E(v) = |N_G(v) ∩ V_upper|`` for every surviving node ``v``.
 * :func:`bucketize` converts a CSR part into the TPU-friendly
-  degree-bucketed padded representation.
+  degree-bucketed padded representation, splitting degree classes into
+  row-tiles whose size is chosen by :func:`autotune_tile_caps` from the
+  part's degree/locality profile (the ``max_bucket_rows="auto"`` path).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,6 +33,25 @@ def _bucket_widths(max_deg: int) -> Sequence[int]:
             break
         w *= 2
     return widths
+
+
+def _degree_classes(deg: np.ndarray):
+    """Yield ``(width, member_ids)`` per non-empty power-of-two degree class.
+
+    The single source of the class boundaries — :func:`bucketize` tiles by
+    it and :func:`autotune_tile_caps` keys its caps by it, so the two can
+    never disagree about which class a node falls in. ``member_ids`` are
+    ascending (the order tiles are cut in); degree-0 nodes belong to no
+    class.
+    """
+    max_deg = int(deg.max(initial=0))
+    if max_deg == 0:
+        return
+    for lo_excl_idx, width in enumerate(_bucket_widths(max_deg)):
+        lo = 0 if lo_excl_idx == 0 else width // 2
+        members = np.nonzero((deg > lo) & (deg <= width))[0]
+        if members.size:
+            yield width, members
 
 
 def induced_subgraph(g: Graph, keep_mask: np.ndarray) -> Tuple[Graph, np.ndarray]:
@@ -79,20 +100,91 @@ def external_info(g: Graph, keep_mask: np.ndarray, upper_mask: np.ndarray) -> np
 
 
 def _tile_row_cap(n_rows: int, row_align: int, max_bucket_rows) -> int:
-    """Resolve the per-bucket row cap used for frontier granularity.
+    """Resolve a *uniform* per-bucket row cap (the non-``"auto"`` paths).
 
-    ``"auto"`` bounds the total tile count to roughly 48 (plus one per
-    degree class) so the unrolled sweep trace stays cheap while small/medium
-    parts still get fine-grained frontier scheduling; an int caps directly;
-    ``None`` disables splitting (one tile per degree class).
+    ``None`` disables splitting (one tile per degree class — coarsest
+    frontier granularity, smallest trace); an int caps tiles at that many
+    rows uniformly across all degree classes (rounded up to ``row_align``).
+    The ``"auto"`` policy no longer lands here: :func:`bucketize` routes it
+    through :func:`autotune_tile_caps`, which picks *per-degree-class* caps
+    from the part's locality profile.
     """
     if max_bucket_rows is None:
         return n_rows if n_rows > 0 else 1
-    if max_bucket_rows == "auto":
-        cap = max(128, -(-n_rows // 48))
-    else:
-        cap = int(max_bucket_rows)
-    return max(row_align, -(-cap // row_align) * row_align)
+    return _align_up(int(max_bucket_rows), row_align)
+
+
+def _align_up(x: int, align: int) -> int:
+    return max(align, -(-int(x) // align) * align)
+
+
+def autotune_tile_caps(
+    g: Graph,
+    row_align: int = 8,
+    tile_budget: int = 48,
+    min_cap: int = 128,
+    locality_boost: float = 3.0,
+) -> Dict[int, int]:
+    """Degree-profile tile autotuner: per-degree-class row caps.
+
+    Returns ``{bucket_width: row_cap}`` for every non-empty degree class.
+    Tiles are the scheduling unit of active-frontier sweeps, so the cap is
+    a work/compile-time trade-off with an asymmetry the old uniform
+    ``n_rows/48`` heuristic ignored:
+
+    * The **static** filter (bucket-adjacency bitmap) only pays off for a
+      tile whose rows' neighbor ids are co-located — then the tile is
+      adjacent to few other tiles and the bitmap row is sparse. Splitting a
+      class whose rows reach across the whole id range (hubs, or any class
+      on an unordered graph) cannot sparsify the bitmap: every shard of it
+      stays adjacent to everything.
+    * The **dynamic** filter (row-exact dirty bits) gets finer with smaller
+      tiles regardless of locality — a tile is skipped iff none of its own
+      rows has a changed neighbor.
+
+    So the tuner splits *everywhere* (dynamic wins) but spends the tile
+    budget preferentially on classes with small neighbor spans (static
+    wins), measured from the actual CSR via
+    :func:`~repro.graph.reorder.neighbor_spans`:
+
+    1. per class ``c``: rows ``n_c`` and mean neighbor-span fraction
+       ``f_c = mean(span) / n`` (0 = perfectly local, 1 = global reach);
+    2. tile share ``w_c = n_c * (1 + locality_boost * (1 - f_c))`` — a
+       perfectly local class gets ``1 + locality_boost`` times the tiles of
+       an equally-sized global one;
+    3. ``cap_c = ceil(n_c / t_c)`` with ``t_c ∝ w_c`` summing to
+       ``tile_budget``, clamped to ``>= min_cap`` and aligned to
+       ``row_align``.
+
+    ``min_cap`` bounds the total tile count on small parts (the unrolled
+    sweep trace is linear in tiles); ``tile_budget`` bounds it on large
+    ones. On an identity-ordered power-law graph every ``f_c ≈ 1`` and the
+    allocation degenerates to the old uniform heuristic; after RCM/BFS
+    reordering (:mod:`repro.graph.reorder`) the low-degree long-tail
+    classes — most of the rows — have small spans and receive fine tiles,
+    which is what makes the static filter fire.
+    """
+    from repro.graph.reorder import neighbor_spans
+
+    deg = g.degrees
+    n = max(g.n_nodes, 1)
+    span = neighbor_spans(g)
+    classes = []  # (width, n_rows, span_frac)
+    for width, members in _degree_classes(deg):
+        f_c = float(span[members].mean()) / n
+        classes.append((width, members.size, min(f_c, 1.0)))
+    if not classes:
+        return {}
+
+    weights = np.array(
+        [n_c * (1.0 + locality_boost * (1.0 - f_c)) for _w, n_c, f_c in classes]
+    )
+    shares = weights / weights.sum() * tile_budget
+    caps: Dict[int, int] = {}
+    for (width, n_c, _f_c), t_c in zip(classes, shares):
+        cap = -(-n_c // max(1.0, t_c))
+        caps[width] = _align_up(max(cap, min_cap), row_align)
+    return caps
 
 
 def bucketize(
@@ -108,10 +200,28 @@ def bucketize(
     padded to a multiple of ``row_align`` (sublane alignment; the distributed
     engine re-pads rows to a multiple of the node-shard count).
 
-    Each degree class is split into row-tiles of at most ``max_bucket_rows``
-    rows (see :func:`_tile_row_cap`); tiles are the scheduling unit of
-    active-frontier sweeps, so finer tiles mean more precise skipping. The
-    ``bucket_adj`` bitmap over tiles is recorded for the engines.
+    Each degree class is split into row-tiles; tiles are the scheduling unit
+    of active-frontier sweeps, so finer tiles mean more precise skipping at
+    the cost of a longer unrolled sweep trace. ``max_bucket_rows`` picks the
+    policy:
+
+    * ``"auto"`` (default) — per-degree-class caps from
+      :func:`autotune_tile_caps`: the tile budget (~48 tiles) is spent
+      preferentially on classes whose neighbor ids are co-located, where the
+      static bucket-adjacency filter can actually fire. This is where
+      locality-aware reordering (:func:`~repro.graph.reorder.reorder_graph`)
+      pays off.
+    * an ``int`` — uniform cap of that many rows per tile for every class.
+    * ``None`` — no splitting: exactly one tile per degree class (coarsest
+      frontier, smallest trace; the pre-frontier layout).
+
+    The ``bucket_adj`` bitmap over tiles is recorded for the engines.
+
+    If ``g`` is reordered (``g.perm`` set), ``ext`` must be given in
+    **original**-id order — it is permuted into the layout order here, and
+    the decompose engines un-permute coreness on the way out, so reordering
+    stays invisible to callers. ``perm``/``inv_perm`` are propagated onto
+    the returned :class:`~repro.graph.structs.BucketedGraph`.
     """
     deg = g.degrees
     n = g.n_nodes
@@ -120,40 +230,41 @@ def bucketize(
     ext = np.asarray(ext, dtype=np.int32)
     if ext.shape != (n,):
         raise ValueError("ext shape mismatch")
+    if g.perm is not None:
+        ext = ext[g.perm]  # original-id order -> layout order
 
     buckets = []
     # node -> bucket index (sentinel slot n and degree-0 nodes map to -1).
     node_bucket = np.full(n + 1, -1, dtype=np.int32)
-    max_deg = int(deg.max(initial=0))
-    row_cap = _tile_row_cap(int((deg > 0).sum()), row_align, max_bucket_rows)
-    if max_deg > 0:
-        for lo_excl_idx, width in enumerate(_bucket_widths(max_deg)):
-            lo = 0 if lo_excl_idx == 0 else width // 2
-            members_all = np.nonzero((deg > lo) & (deg <= width))[0]
-            if members_all.size == 0:
-                continue
-            for tile_lo in range(0, members_all.size, row_cap):
-                members = members_all[tile_lo : tile_lo + row_cap]
-                nb = int(np.ceil(members.size / row_align) * row_align)
-                # Padded rows scatter into the sentinel slot `n` of the state
-                # vector (re-pinned to -1 after each update), never into a node.
-                node_ids = np.full(nb, n, dtype=np.int32)
-                node_ids[: members.size] = members
-                neigh = np.full((nb, width), n, dtype=np.int32)  # sentinel pad
-                row_deg = np.zeros(nb, dtype=np.int32)
-                row_deg[: members.size] = deg[members]
-                # Fill rows: gather each member's adjacency slice.
-                starts = g.indptr[members]
-                lens = deg[members]
-                flat_idx = (starts[:, None] + np.arange(width)[None, :]).astype(np.int64)
-                valid = np.arange(width)[None, :] < lens[:, None]
-                flat_idx = np.where(valid, flat_idx, 0)
-                vals = g.indices[flat_idx]
-                neigh[: members.size] = np.where(valid, vals, n)
-                node_bucket[members] = len(buckets)
-                buckets.append(
-                    Bucket(node_ids=node_ids, neigh=neigh, deg=row_deg, width=width)
-                )
+    if max_bucket_rows == "auto":
+        caps = autotune_tile_caps(g, row_align=row_align)
+    else:
+        uniform = _tile_row_cap(int((deg > 0).sum()), row_align, max_bucket_rows)
+        caps = None
+    for width, members_all in _degree_classes(deg):
+        row_cap = caps[width] if caps is not None else uniform
+        for tile_lo in range(0, members_all.size, row_cap):
+            members = members_all[tile_lo : tile_lo + row_cap]
+            nb = _align_up(members.size, row_align)
+            # Padded rows scatter into the sentinel slot `n` of the state
+            # vector (re-pinned to -1 after each update), never into a node.
+            node_ids = np.full(nb, n, dtype=np.int32)
+            node_ids[: members.size] = members
+            neigh = np.full((nb, width), n, dtype=np.int32)  # sentinel pad
+            row_deg = np.zeros(nb, dtype=np.int32)
+            row_deg[: members.size] = deg[members]
+            # Fill rows: gather each member's adjacency slice.
+            starts = g.indptr[members]
+            lens = deg[members]
+            flat_idx = (starts[:, None] + np.arange(width)[None, :]).astype(np.int64)
+            valid = np.arange(width)[None, :] < lens[:, None]
+            flat_idx = np.where(valid, flat_idx, 0)
+            vals = g.indices[flat_idx]
+            neigh[: members.size] = np.where(valid, vals, n)
+            node_bucket[members] = len(buckets)
+            buckets.append(
+                Bucket(node_ids=node_ids, neigh=neigh, deg=row_deg, width=width)
+            )
 
     # Bucket-adjacency bitmap for frontier scheduling. An endpoint of any
     # edge has degree >= 1, so every real neighbor id maps to a bucket;
@@ -172,4 +283,5 @@ def bucketize(
     return BucketedGraph(
         n_nodes=n, buckets=buckets, ext=ext, degrees=deg.astype(np.int32),
         bucket_adj=adj, node_bucket=node_bucket,
+        perm=g.perm, inv_perm=g.inv_perm,
     )

@@ -27,11 +27,25 @@ class Graph:
       indptr:  ``[n_nodes + 1]`` int64 row offsets.
       indices: ``[2 * n_edges]`` int32 neighbor ids (both directions stored).
       n_nodes: number of vertices.
+      perm:    optional ``[n_nodes]`` int64 layout permutation,
+               ``perm[new_id] = old_id`` — set by
+               :func:`~repro.graph.reorder.reorder_graph` when the CSR has
+               been relabeled into a locality-aware order. ``None`` means
+               the CSR is in original-id order.
+      inv_perm: the inverse (``inv_perm[old_id] = new_id``); set iff
+               ``perm`` is.
+
+    When ``perm`` is set, the CSR arrays index *new* (reordered) ids, but
+    the public contract stays original-id: :func:`~repro.graph.build.bucketize`
+    permutes ``ext`` inputs in, and the decompose engines permute coreness
+    outputs back, so callers never see reordered ids.
     """
 
     indptr: np.ndarray
     indices: np.ndarray
     n_nodes: int
+    perm: Optional[np.ndarray] = None
+    inv_perm: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------ #
     # Constructors
@@ -142,6 +156,13 @@ class BucketedGraph:
     scheduling *sound*: a bucket whose own rows and whose adjacent buckets
     were all quiescent last sweep cannot change this sweep, so the engines
     skip its gather + h-index outright.
+
+    ``perm``/``inv_perm`` (propagated from a reordered source
+    :class:`Graph`) record the layout permutation the tiles were built in:
+    node ids inside the buckets are *new* (reordered) ids, ``ext`` and
+    ``degrees`` are stored in new-id order, and the decompose engines gather
+    ``coreness[inv_perm]`` on the way out so results are reported in
+    original-id order. ``None`` = identity layout.
     """
 
     n_nodes: int
@@ -150,6 +171,8 @@ class BucketedGraph:
     degrees: np.ndarray  # [n_nodes] int32, in-part degree
     bucket_adj: Optional[np.ndarray] = None  # [n_buckets, n_buckets] bool
     node_bucket: Optional[np.ndarray] = None  # [n_nodes + 1] int32, -1 = none
+    perm: Optional[np.ndarray] = None  # [n_nodes] int64, new -> old
+    inv_perm: Optional[np.ndarray] = None  # [n_nodes] int64, old -> new
 
     def memory_bytes(self) -> int:
         return int(

@@ -3,9 +3,16 @@
   python -m repro.launch.kcore --graph rmat:18:16 --thresholds 16,64
   python -m repro.launch.kcore --graph file:/data/com-friendster.txt \
       --budget-gb 2 --strategy rough --check
+  python -m repro.launch.kcore --graph rmat:14:12 --reorder rcm --check
 
 Graphs: ``rmat:<scale>:<edge_factor>``, ``ba:<n>:<m>``, ``er:<n>:<deg>``,
 ``file:<path>`` (SNAP edge list), ``npz:<path>``.
+
+``--reorder {identity,bfs,rcm}`` applies a locality-aware node ordering to
+each part before tiling (sparser bucket-adjacency bitmap, better static
+frontier skipping); ``--max-bucket-rows`` overrides the tile autotuner with
+a uniform row cap (``auto`` = degree-profile autotuner, ``none`` = one tile
+per degree class).
 """
 from __future__ import annotations
 
@@ -37,6 +44,18 @@ def load_graph(spec: str, seed: int):
     raise ValueError(f"unknown graph spec {spec}")
 
 
+def parse_max_bucket_rows(v: str):
+    """argparse type for --max-bucket-rows: "auto" | "none" -> None | int."""
+    if v == "auto":
+        return "auto"
+    if v == "none":
+        return None
+    try:
+        return int(v)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected 'auto', 'none' or an int, got {v!r}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="rmat:14:16")
@@ -44,6 +63,11 @@ def main():
     ap.add_argument("--budget-gb", type=float, default=None,
                     help="auto-plan thresholds for this per-part budget")
     ap.add_argument("--strategy", choices=["rough", "exact"], default="rough")
+    ap.add_argument("--reorder", choices=["identity", "bfs", "rcm"], default="identity",
+                    help="locality-aware node ordering applied per part")
+    ap.add_argument("--max-bucket-rows", type=parse_max_bucket_rows, default="auto",
+                    help='tile row cap: "auto" (degree-profile autotuner), '
+                         '"none" (one tile per degree class) or an int')
     ap.add_argument("--check", action="store_true", help="verify vs BZ peeling")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -58,17 +82,21 @@ def main():
         thresholds = [int(t) for t in args.thresholds.split(",") if t]
 
     t0 = time.time()
-    core, report = dc_kcore(g, thresholds=thresholds, strategy=args.strategy)
+    core, report = dc_kcore(g, thresholds=thresholds, strategy=args.strategy,
+                            reorder=args.reorder,
+                            max_bucket_rows=args.max_bucket_rows)
     print(f"\nDC-kCore done in {report.total_time_s:.2f}s "
-          f"(preprocess {report.preprocess_time_s:.2f}s)")
+          f"(preprocess {report.preprocess_time_s:.2f}s, reorder={args.reorder})")
     print(f"k_max = {int(core.max())}, total comm = {report.total_comm:,} updates, "
           f"peak part bytes = {report.peak_bytes/2**20:.1f} MiB")
     print(f"sweep work (frontier): {report.total_gathered_rows:,} gathered rows "
-          f"vs {report.total_full_sweep_rows:,} full-sweep rows")
+          f"vs {report.total_full_sweep_rows:,} full-sweep rows; "
+          f"measured collective bytes = {report.total_collective_bytes:,}")
     for p in report.parts:
         print(f"  part {p.name:>10}: n={p.n_nodes:>9,} m={p.n_edges:>11,} "
               f"iters={p.iterations:>3} comm={p.comm_amount:>10,} "
               f"work={p.gathered_rows:>10,}/{p.full_sweep_rows:<10,} "
+              f"adj_density={p.bitmap_density:.3f} coll_bytes={p.collective_bytes:,} "
               f"finalized={p.finalized:,}")
     if args.check:
         t0 = time.time()

@@ -125,6 +125,52 @@ print("OK", b, b16, b_act)
     assert "OK" in out
 
 
+def test_distributed_reorder_and_measured_bytes():
+    """Reordered layout in the shard_map engine: coreness still comes back
+    in original-id order, and the measured per-sweep collective counters
+    track the frontier (first sweep == analytic full-sweep model + the
+    dirty-bit psum the analytic model omits)."""
+    out = run_with_devices(
+        _COMMON
+        + r"""
+from repro.core.distributed import measured_sweep_bytes, shard_buckets
+from repro.core.hindex import hindex_of_sequence
+from repro.graph.reorder import reorder_graph
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+plan = MeshPlan(mesh=mesh, node_axes=("data",), slot_axes=("model",))
+g = rmat(10, 8, seed=3)
+rg = reorder_graph(g, "rcm")
+bg = bucketize(rg)
+res = decompose_distributed(bg, plan)
+np.testing.assert_array_equal(res.coreness, peel_coreness(g))
+# Measured counters: one entry per sweep, all positive, non-increasing
+# overall work as the frontier shrinks to quiescence.
+assert len(res.collective_bytes_per_iter) == res.iterations
+assert all(b > 0 for b in res.collective_bytes_per_iter)
+assert res.collective_bytes == sum(res.collective_bytes_per_iter)
+# First sweep is a full sweep: measured == analytic + the two terms the
+# analytic model omits — the per-bucket int32 ids all_gather and the
+# [n_buckets] dirty-bit psum (2*(k-1)/k ring over the 8-device mesh).
+cand = max(1, hindex_of_sequence(bg.degrees.astype(np.int64) + bg.ext))
+analytic = sweep_collective_bytes(bg, plan, cand=cand)
+ns = plan.n_node_shards
+ids_gather = sum((ns - 1) * (-(-b.n_rows // ns)) * 4 for b in bg.buckets)
+dirty_psum = int(2 * (8 - 1) / 8 * len(bg.buckets) * 4)
+assert res.collective_bytes_per_iter[0] == analytic + ids_gather + dirty_psum
+# Frontier shrinks => later sweeps move fewer bytes than the first.
+assert res.collective_bytes_per_iter[-1] < res.collective_bytes_per_iter[0]
+# The baseline (frontier off) repeats the full sweep every time (no dirty
+# psum, ids gather still issued).
+base = decompose_distributed(bg, plan, frontier=False)
+assert all(b == analytic + ids_gather for b in base.collective_bytes_per_iter)
+assert res.collective_bytes < base.collective_bytes
+print("OK", res.collective_bytes, base.collective_bytes)
+""",
+        n_devices=8,
+    )
+    assert "OK" in out
+
+
 def test_distributed_with_pallas_counts_kernel():
     """Distributed sweep with the Pallas partial-counts kernel == oracle."""
     out = run_with_devices(
