@@ -9,7 +9,7 @@ Public API:
 * :mod:`repro.core.hindex` — paper Algorithms 1 & 2, vectorized.
 * :func:`repro.core.divide.plan_thresholds` — resource-driven divide planner.
 """
-from repro.core.dckcore import DCKCoreReport, PartReport, dc_kcore
+from repro.core.dckcore import DCKCoreReport, PartReport, PipelineState, dc_kcore
 from repro.core.decompose import DecomposeResult, decompose
 from repro.core.divide import plan_thresholds
 from repro.core.hindex import hindex_brute, hindex_count, hindex_sorted
@@ -18,6 +18,7 @@ __all__ = [
     "dc_kcore",
     "DCKCoreReport",
     "PartReport",
+    "PipelineState",
     "decompose",
     "DecomposeResult",
     "plan_thresholds",

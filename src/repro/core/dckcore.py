@@ -1,4 +1,4 @@
-"""DC-kCore orchestrator — divide, conquer (sequentially), merge.
+"""DC-kCore orchestrator — divide, conquer (sequentially), merge, resume.
 
 Implements the full pipeline of paper Section 4 for an arbitrary number of
 parts (Section 5.6 evaluates 2-4):
@@ -19,12 +19,34 @@ part we record nodes/edges/iterations/communication/peak bytes/extract and
 decompose times, plus the frontier work metric (rows gathered per sweep vs
 the always-full-sweep baseline); these power every benchmark table
 (Figs 7-11, Table 3) and the work-per-iteration columns.
+
+**Per-part checkpointing.** The paper's headline stability claim (136B
+edges, 27.5h runs) only holds if a failed part does not forfeit the parts
+already decomposed. The loop state between parts is an explicit
+:class:`PipelineState`; with ``checkpoint_dir`` set it is saved atomically
+through :func:`repro.ckpt.save_pytree` after every part, and
+``resume=True`` re-enters at the first unfinished part:
+
+* the checkpoint holds the *host merge state* — coreness, the finalized
+  mask, ``ext`` of the remaining nodes, the remaining-id map, the
+  threshold cursor and the per-part reports (JSON extra);
+* it deliberately does NOT hold the remaining graph or any device tiles —
+  the remaining graph is recomputed from the original graph and the
+  finalized mask (induced-subgraph composition is byte-stable), and parts
+  rebuild their tiles anyway;
+* a killed run leaves at most a ``step_*.tmp`` directory, which restore
+  ignores — resume always starts from the last *complete* part boundary
+  and reproduces byte-identical coreness (every stage is deterministic).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import re
+import shutil
 import time
-from typing import Callable, List, Optional, Sequence
+import zlib
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -33,6 +55,32 @@ from repro.core.divide import timed_candidates
 from repro.graph.build import bucketize, external_info, induced_subgraph
 from repro.graph.reorder import bitmap_density, reorder_graph
 from repro.graph.structs import BucketedGraph, Graph
+
+STATE_FORMAT = 1
+
+
+def graph_fingerprint(g: Graph) -> Dict[str, int]:
+    """Cheap identity of a graph for checkpoint/resume validation: node and
+    edge counts plus a CRC of the degree sequence. O(n), no edge traversal —
+    collisions require an identical degree sequence, at which point the
+    resume-time remaining-id assertion is the backstop."""
+    deg = np.ascontiguousarray(g.degrees, dtype=np.int64)
+    return {
+        "n_nodes": int(g.n_nodes),
+        "n_edges": int(g.n_edges),
+        "deg_crc32": int(zlib.crc32(deg.tobytes())),
+    }
+
+
+def _clear_checkpoints(path: str) -> None:
+    """Remove every step dir (and half-written .tmp) under ``path`` — a
+    fresh run must not leave stale higher-numbered steps from a previous
+    run for a later ``resume=True`` to pick up."""
+    if not os.path.isdir(path):
+        return
+    for d in os.listdir(path):
+        if re.fullmatch(r"step_\d+(\.tmp)?", d):
+            shutil.rmtree(os.path.join(path, d), ignore_errors=True)
 
 
 @dataclasses.dataclass
@@ -59,6 +107,8 @@ class PartReport:
     # the static frontier filter could NOT rule out a tile (lower = sparser
     # = locality-aware reordering worked).
     bitmap_density: float = 1.0
+    # Wall time of the atomic per-part checkpoint save (0 when disabled).
+    save_time_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -66,6 +116,7 @@ class DCKCoreReport:
     parts: List[PartReport]
     total_time_s: float
     preprocess_time_s: float
+    resumed_parts: int = 0  # parts restored from checkpoint, not re-run
 
     @property
     def total_comm(self) -> int:
@@ -94,8 +145,129 @@ class DCKCoreReport:
         """Measured per-device collective bytes summed over all parts."""
         return sum(p.collective_bytes for p in self.parts)
 
+    @property
+    def total_save_time_s(self) -> float:
+        """Wall time spent in per-part checkpoint saves."""
+        return sum(p.save_time_s for p in self.parts)
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Host state of a DC-kCore run at a part boundary — the checkpoint unit.
+
+    ``parts_done`` is the RNG-free cursor: how many thresholds of the
+    (descending, deduplicated) plan have been consumed. ``complete`` marks
+    that the final "rest" part also finished — a resume of a complete state
+    returns the stored result without touching the graph.
+    """
+
+    coreness: np.ndarray       # [n] int32, -1 where unfinalized
+    finalized: np.ndarray      # [n] bool
+    ext_remaining: np.ndarray  # [n_remaining] int32, remaining-local order
+    remaining_ids: np.ndarray  # [n_remaining] int64, remaining-local -> orig
+    thresholds: List[int]      # the descending plan (consistency-checked)
+    fingerprint: Dict[str, int] = dataclasses.field(default_factory=dict)
+    parts_done: int = 0
+    complete: bool = False
+    reports: List[PartReport] = dataclasses.field(default_factory=list)
+
+    @staticmethod
+    def fresh(g: Graph, thresholds: Sequence[int]) -> "PipelineState":
+        n_nodes = g.n_nodes
+        return PipelineState(
+            coreness=np.full(n_nodes, -1, dtype=np.int32),
+            finalized=np.zeros(n_nodes, dtype=bool),
+            ext_remaining=np.zeros(n_nodes, dtype=np.int32),
+            remaining_ids=np.arange(n_nodes, dtype=np.int64),
+            thresholds=[int(t) for t in thresholds],
+            fingerprint=graph_fingerprint(g),
+        )
+
+    # -- checkpoint wire format ----------------------------------------- #
+    def arrays(self) -> dict:
+        """The array pytree saved per part (scalars/reports ride in extra)."""
+        return {
+            "coreness": self.coreness,
+            "finalized": self.finalized,
+            "ext_remaining": self.ext_remaining,
+            "remaining_ids": self.remaining_ids,
+        }
+
+    def extra(self) -> dict:
+        return {
+            "format": STATE_FORMAT,
+            "parts_done": int(self.parts_done),
+            "complete": bool(self.complete),
+            "thresholds": [int(t) for t in self.thresholds],
+            "fingerprint": dict(self.fingerprint),
+            "reports": [dataclasses.asdict(p) for p in self.reports],
+        }
+
+    def save(self, checkpoint_dir: str) -> float:
+        """Atomic save at the current part boundary; returns wall seconds.
+
+        Step number = parts completed so far (the rest part counts one
+        past the last threshold), so ``latest_step`` is the cursor. A
+        part's own ``save_time_s`` is only known after its save returns,
+        so it is persisted one boundary later (the next save serializes
+        the updated report); the final part's save cost exists only in the
+        live report.
+
+        Restore only ever reads the latest step, so retention is
+        ``CheckpointManager(keep=1)``: earlier steps are pruned *after* the
+        atomic rename — disk stays bounded at one checkpoint (the state
+        arrays are O(n); at paper scale a P-part run must not hold P of
+        them). A crash between rename and prune leaves two steps; resume
+        still picks the newest."""
+        from repro.ckpt import CheckpointManager
+
+        t0 = time.time()
+        step = self.parts_done + (1 if self.complete else 0)
+        CheckpointManager(checkpoint_dir, keep=1).save(
+            self.arrays(), step, extra=self.extra(), blocking=True
+        )
+        return time.time() - t0
+
+    @staticmethod
+    def restore(checkpoint_dir: str, n_nodes: int) -> Optional["PipelineState"]:
+        """Latest complete checkpoint under ``checkpoint_dir`` (``None`` if
+        there is none — half-written ``step_*.tmp`` dirs are ignored by
+        :func:`repro.ckpt.latest_step`)."""
+        from repro.ckpt import latest_step, restore_pytree
+
+        if latest_step(checkpoint_dir) is None:
+            return None
+        template = {
+            "coreness": np.zeros(0, np.int32),
+            "finalized": np.zeros(0, bool),
+            "ext_remaining": np.zeros(0, np.int32),
+            "remaining_ids": np.zeros(0, np.int64),
+        }
+        arrays, _step, extra = restore_pytree(checkpoint_dir, template)
+        if extra.get("format") != STATE_FORMAT:
+            raise ValueError(
+                f"checkpoint format {extra.get('format')!r} != {STATE_FORMAT}"
+            )
+        if arrays["coreness"].shape[0] != n_nodes:
+            raise ValueError(
+                f"checkpoint is for a {arrays['coreness'].shape[0]}-node graph, "
+                f"got {n_nodes} nodes"
+            )
+        return PipelineState(
+            coreness=arrays["coreness"],
+            finalized=arrays["finalized"],
+            ext_remaining=arrays["ext_remaining"],
+            remaining_ids=arrays["remaining_ids"],
+            thresholds=[int(t) for t in extra["thresholds"]],
+            fingerprint={k: int(v) for k, v in extra["fingerprint"].items()},
+            parts_done=int(extra["parts_done"]),
+            complete=bool(extra["complete"]),
+            reports=[PartReport(**r) for r in extra["reports"]],
+        )
+
 
 DecomposeFn = Callable[[BucketedGraph], DecomposeResult]
+PartHook = Callable[[int, PartReport], None]
 
 
 def dc_kcore(
@@ -106,6 +278,10 @@ def dc_kcore(
     row_align: int = 8,
     reorder: str = "identity",
     max_bucket_rows="auto",
+    reorder_sample_edges: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
+    on_part_done: Optional[PartHook] = None,
 ) -> tuple[np.ndarray, DCKCoreReport]:
     """Run DC-kCore. ``thresholds=()`` degenerates to the monolithic baseline
     (= the PSGraph competitor in the paper's tables).
@@ -120,24 +296,69 @@ def dc_kcore(
     bitmap gets sparser, and the static frontier filter starts paying off.
     Purely a layout decision — the permutation is carried on the
     ``BucketedGraph`` and the engines report coreness in part-local original
-    ids, so divide/merge is untouched. ``max_bucket_rows`` is forwarded to
-    :func:`~repro.graph.build.bucketize` (``"auto"`` = the degree-profile
-    tile autotuner).
+    ids, so divide/merge is untouched. ``reorder_sample_edges`` switches the
+    ordering computation to the bounded edge-sample variant
+    (:func:`~repro.graph.reorder.sampled_order`). ``max_bucket_rows`` is
+    forwarded to :func:`~repro.graph.build.bucketize` (``"auto"`` = the
+    degree-profile tile autotuner).
+
+    ``checkpoint_dir`` enables per-part checkpointing: the
+    :class:`PipelineState` is saved atomically after every part, and
+    ``resume=True`` restores the latest complete checkpoint and re-enters at
+    the first unfinished part — a killed run resumed this way produces
+    coreness **byte-identical** to the uninterrupted run. ``on_part_done``
+    (``hook(part_index, report)``) fires after each part's save — the
+    fault-injection tests raise from it to simulate a crash at the worst
+    moment (state saved, next part not started).
     """
     if decompose_fn is None:
         decompose_fn = lambda bg: decompose(bg)  # noqa: E731
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True requires checkpoint_dir")
     thresholds = sorted(set(int(t) for t in thresholds), reverse=True)
     t_start = time.time()
 
     n = g.n_nodes
-    coreness = np.full(n, -1, dtype=np.int32)
-    finalized = np.zeros(n, dtype=bool)
-    # Remaining graph state (original ids).
-    ext_full = np.zeros(n, dtype=np.int32)
-    remaining_graph = g
-    remaining_ids = np.arange(n, dtype=np.int64)  # remaining-local -> original
+    state: Optional[PipelineState] = None
+    resumed_parts = 0
+    if resume:
+        state = PipelineState.restore(checkpoint_dir, n)
+    if state is None:
+        if checkpoint_dir is not None:
+            # Fresh run: purge stale steps from any previous run in this
+            # dir, so a later resume can only see this run's boundaries.
+            _clear_checkpoints(checkpoint_dir)
+        state = PipelineState.fresh(g, thresholds)
+        remaining_graph = g
+    else:
+        if state.fingerprint != graph_fingerprint(g):
+            raise ValueError(
+                f"checkpoint was written for a different graph "
+                f"(fingerprint {state.fingerprint} != {graph_fingerprint(g)})"
+            )
+        if state.thresholds != thresholds:
+            raise ValueError(
+                f"checkpoint plans thresholds {state.thresholds}, "
+                f"this run asked for {thresholds}"
+            )
+        resumed_parts = len(state.reports)
+        if state.complete:
+            report = DCKCoreReport(
+                parts=state.reports,
+                total_time_s=time.time() - t_start,
+                preprocess_time_s=0.0,
+                resumed_parts=resumed_parts,
+            )
+            return state.coreness.copy(), report
+        # Rebuild the remaining graph from the original + finalized mask.
+        # Induced-subgraph composition is byte-stable (monotone relabeling
+        # of a sorted CSR), so this equals the incrementally shrunk graph.
+        remaining_graph, keep_ids = induced_subgraph(g, ~state.finalized)
+        assert np.array_equal(keep_ids, state.remaining_ids), (
+            "checkpoint remaining-id map inconsistent with finalized mask"
+        )
 
-    parts: List[PartReport] = []
+    parts: List[PartReport] = state.reports
     preprocess = 0.0
 
     def run_part(part_g: Graph, part_ext: np.ndarray, name: str,
@@ -148,48 +369,63 @@ def dc_kcore(
         # space, and locality only has to hold within the tiles actually
         # decomposed together. part_ext stays in part-local original order;
         # bucketize permutes it in and the engine un-permutes coreness out.
-        bg = bucketize(reorder_graph(part_g, reorder), ext=part_ext,
-                       row_align=row_align, max_bucket_rows=max_bucket_rows)
+        bg = bucketize(
+            reorder_graph(part_g, reorder, sample_edges=reorder_sample_edges),
+            ext=part_ext, row_align=row_align, max_bucket_rows=max_bucket_rows,
+        )
         preprocess += (time.time() - t0) + extract_time
         return decompose_fn(bg), bitmap_density(bg)
 
-    for t in thresholds:
-        cand_mask, extract_time = timed_candidates(remaining_graph, ext_full, t, strategy)
+    def checkpoint_part(report: Optional[PartReport]):
+        """Save state at a part boundary, then fire the hook."""
+        if checkpoint_dir is not None:
+            save_s = state.save(checkpoint_dir)
+            if report is not None:
+                report.save_time_s = save_s
+        if on_part_done is not None and report is not None:
+            on_part_done(len(parts) - 1, report)
+
+    for ti in range(state.parts_done, len(thresholds)):
+        t = thresholds[ti]
+        cand_mask, extract_time = timed_candidates(
+            remaining_graph, state.ext_remaining, t, strategy
+        )
         if not cand_mask.any():
+            state.parts_done = ti + 1
+            checkpoint_part(None)
             continue
         t_ext0 = time.time()
         part_g, part_local_ids = induced_subgraph(remaining_graph, cand_mask)
-        part_ext = ext_full[cand_mask]
+        part_ext = state.ext_remaining[cand_mask]
         extract_time += time.time() - t_ext0
 
         res, density = run_part(part_g, part_ext, f"core>={t}", t, extract_time)
 
         # Finalize nodes that resolved at >= t (all of them for Exact-Divide).
         final_local = res.coreness >= t
-        part_orig_ids = remaining_ids[part_local_ids]
+        part_orig_ids = state.remaining_ids[part_local_ids]
         newly = part_orig_ids[final_local]
-        coreness[newly] = res.coreness[final_local]
-        finalized[newly] = True
+        state.coreness[newly] = res.coreness[final_local]
+        state.finalized[newly] = True
 
-        parts.append(
-            PartReport(
-                name=f"core>={t}",
-                threshold=t,
-                n_nodes=part_g.n_nodes,
-                n_edges=part_g.n_edges,
-                iterations=res.iterations,
-                comm_amount=res.comm_amount,
-                peak_bytes=res.peak_bytes,
-                extract_time_s=extract_time,
-                decompose_time_s=res.wall_time_s,
-                finalized=int(final_local.sum()),
-                gathered_rows=res.gathered_rows,
-                full_sweep_rows=res.full_sweep_rows,
-                active_rows_per_iter=list(res.active_rows_per_iter),
-                collective_bytes=res.collective_bytes,
-                bitmap_density=density,
-            )
+        report = PartReport(
+            name=f"core>={t}",
+            threshold=t,
+            n_nodes=part_g.n_nodes,
+            n_edges=part_g.n_edges,
+            iterations=res.iterations,
+            comm_amount=res.comm_amount,
+            peak_bytes=res.peak_bytes,
+            extract_time_s=extract_time,
+            decompose_time_s=res.wall_time_s,
+            finalized=int(final_local.sum()),
+            gathered_rows=res.gathered_rows,
+            full_sweep_rows=res.full_sweep_rows,
+            active_rows_per_iter=list(res.active_rows_per_iter),
+            collective_bytes=res.collective_bytes,
+            bitmap_density=density,
         )
+        parts.append(report)
 
         # Shrink the remaining graph; fold finalized neighbors into ext.
         t_ext0 = time.time()
@@ -198,39 +434,52 @@ def dc_kcore(
         keep_local = ~newly_mask_local
         ext_delta = external_info(remaining_graph, keep_local, newly_mask_local)
         new_graph, keep_ids = induced_subgraph(remaining_graph, keep_local)
-        ext_full = ext_full[keep_local] + ext_delta
-        remaining_ids = remaining_ids[keep_ids]
+        state.ext_remaining = state.ext_remaining[keep_local] + ext_delta
+        state.remaining_ids = state.remaining_ids[keep_ids]
         remaining_graph = new_graph
         preprocess += time.time() - t_ext0
 
+        state.parts_done = ti + 1
+        checkpoint_part(report)
+
     # Final (bottom) part: everything left.
     if remaining_graph.n_nodes > 0:
-        res, density = run_part(remaining_graph, ext_full, "rest", None, 0.0)
-        coreness[remaining_ids] = res.coreness
-        parts.append(
-            PartReport(
-                name="rest",
-                threshold=None,
-                n_nodes=remaining_graph.n_nodes,
-                n_edges=remaining_graph.n_edges,
-                iterations=res.iterations,
-                comm_amount=res.comm_amount,
-                peak_bytes=res.peak_bytes,
-                extract_time_s=0.0,
-                decompose_time_s=res.wall_time_s,
-                finalized=remaining_graph.n_nodes,
-                gathered_rows=res.gathered_rows,
-                full_sweep_rows=res.full_sweep_rows,
-                active_rows_per_iter=list(res.active_rows_per_iter),
-                collective_bytes=res.collective_bytes,
-                bitmap_density=density,
-            )
+        res, density = run_part(
+            remaining_graph, state.ext_remaining, "rest", None, 0.0
         )
+        state.coreness[state.remaining_ids] = res.coreness
+        state.finalized[state.remaining_ids] = True
+        report = PartReport(
+            name="rest",
+            threshold=None,
+            n_nodes=remaining_graph.n_nodes,
+            n_edges=remaining_graph.n_edges,
+            iterations=res.iterations,
+            comm_amount=res.comm_amount,
+            peak_bytes=res.peak_bytes,
+            extract_time_s=0.0,
+            decompose_time_s=res.wall_time_s,
+            finalized=remaining_graph.n_nodes,
+            gathered_rows=res.gathered_rows,
+            full_sweep_rows=res.full_sweep_rows,
+            active_rows_per_iter=list(res.active_rows_per_iter),
+            collective_bytes=res.collective_bytes,
+            bitmap_density=density,
+        )
+        parts.append(report)
+        state.remaining_ids = np.zeros(0, dtype=np.int64)
+        state.ext_remaining = np.zeros(0, dtype=np.int32)
+        state.complete = True
+        checkpoint_part(report)
+    else:
+        state.complete = True
+        checkpoint_part(None)
 
     report = DCKCoreReport(
         parts=parts,
         total_time_s=time.time() - t_start,
         preprocess_time_s=preprocess,
+        resumed_parts=resumed_parts,
     )
-    assert (coreness >= 0).all(), "merge left unfinalized nodes"
-    return coreness, report
+    assert (state.coreness >= 0).all(), "merge left unfinalized nodes"
+    return state.coreness, report

@@ -25,7 +25,7 @@ paper's "limited resources" knob.
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import List, Tuple, Union
 
 import numpy as np
 
@@ -69,35 +69,69 @@ def timed_candidates(
 
 
 def plan_thresholds(
-    g: Graph,
+    g: Union[Graph, np.ndarray],
     part_budget_bytes: int,
     max_parts: int = 8,
     bytes_per_edge: int = 8,
 ) -> List[int]:
     """Pick division thresholds so each part's footprint fits the budget.
 
-    Walks the degree distribution from the top: the highest-threshold part
-    contains the highest-degree nodes (a superset of the densest cores).
-    Greedy: grow the current part until its padded edge estimate exceeds the
-    budget, then emit a threshold. Returns descending thresholds (possibly
-    empty = no division needed).
+    ``g`` may be a :class:`Graph` or just its **degree array** — planning
+    needs nothing else, so on the streaming ingest path it can run from
+    :meth:`EdgeStore.dup_degrees <repro.graph.io.EdgeStore.dup_degrees>`
+    before (or without) the edge list being resident.
+
+    Walks the degree distribution from the top as runs of equal degree
+    (nodes of one degree value are indivisible by thresholds): the current
+    part greedily absorbs runs while its padded edge estimate fits the
+    budget; the first run that would overflow closes the part, whose
+    threshold is the degree of its last absorbed run (part = ``deg >= t``).
+    A repeated overflow at the same degree value — the old early-``break``
+    bug — cannot occur: runs are strictly decreasing, so every emitted
+    threshold is strictly below the previous one. Returns descending
+    thresholds (possibly empty = no division needed).
+
+    Every planned part's estimate fits the budget, with one unavoidable
+    exception: a single run that alone exceeds it (equal-degree nodes
+    cannot be split by a degree threshold) becomes its own over-budget
+    part. The trailing run group is always closed with its own threshold:
+    division was needed (total > budget), so the planned remainder must
+    not merge with the unsplittable low-degree tail into an over-budget
+    rest part. Thresholds <= 1 are never emitted — the implicit final
+    "rest" covers the deg <= 1 tail.
     """
-    deg = np.sort(g.degrees.astype(np.int64))[::-1]
+    deg_src = g.degrees if isinstance(g, Graph) else np.asarray(g)
+    deg = np.sort(deg_src.astype(np.int64))[::-1]
     if deg.size == 0:
         return []
     total = int(deg.sum()) * bytes_per_edge
     if total <= part_budget_bytes:
         return []
+    # Runs of equal degree, descending: values[i] with total bytes run_bytes[i].
+    values, run_len = np.unique(deg, return_counts=True)
+    values, run_len = values[::-1], run_len[::-1]
+    run_bytes = values * run_len * bytes_per_edge
     thresholds: List[int] = []
     acc = 0
-    for d in deg:
-        acc += int(d) * bytes_per_edge
-        if acc > part_budget_bytes:
-            t = int(d)
-            if t <= 1 or (thresholds and t >= thresholds[-1]):
-                break
-            thresholds.append(t)
+    prev_v = None
+    for v, rb in zip(values, run_bytes):
+        if v <= 1:
+            break
+        if acc > 0 and acc + int(rb) > part_budget_bytes:
+            # Close the current part before this run; its threshold is the
+            # last absorbed run's degree (strictly greater than v).
+            thresholds.append(int(prev_v))
             acc = 0
             if len(thresholds) >= max_parts - 1:
                 break
+        acc += int(rb)
+        prev_v = v
+    # Close the trailing group too: reaching the loop means total > budget,
+    # so without this cut the planned remainder would merge with the
+    # deg <= 1 tail into an over-budget rest and the graph could even end
+    # up monolithic (the old planner's under-division modes).
+    if (acc > 0 and prev_v is not None and prev_v > 1
+            and len(thresholds) < max_parts - 1
+            and (not thresholds or prev_v < thresholds[-1])):
+        thresholds.append(int(prev_v))
     return thresholds

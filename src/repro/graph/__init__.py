@@ -7,6 +7,14 @@ degree-bucketed padded adjacency tiles (``BucketedGraph``) built by
 from repro.graph.structs import Graph, BucketedGraph, Bucket
 from repro.graph.build import autotune_tile_caps, bucketize, induced_subgraph, external_info
 from repro.graph.generators import erdos_renyi, barabasi_albert, rmat
+from repro.graph.io import (
+    EdgeStore,
+    IngestStats,
+    csr_from_edge_chunks,
+    graph_edge_chunks,
+    iter_edgelist_chunks,
+    stream_edgelist,
+)
 from repro.graph.oracle import peel_coreness, nx_coreness
 from repro.graph.reorder import (
     REORDER_METHODS,
@@ -14,6 +22,8 @@ from repro.graph.reorder import (
     bitmap_density,
     rcm_order,
     reorder_graph,
+    sample_edge_skeleton,
+    sampled_order,
 )
 
 __all__ = [
@@ -27,6 +37,12 @@ __all__ = [
     "erdos_renyi",
     "barabasi_albert",
     "rmat",
+    "EdgeStore",
+    "IngestStats",
+    "csr_from_edge_chunks",
+    "graph_edge_chunks",
+    "iter_edgelist_chunks",
+    "stream_edgelist",
     "peel_coreness",
     "nx_coreness",
     "REORDER_METHODS",
@@ -34,4 +50,6 @@ __all__ = [
     "bitmap_density",
     "rcm_order",
     "reorder_graph",
+    "sample_edge_skeleton",
+    "sampled_order",
 ]

@@ -10,6 +10,12 @@ These are the host-side preprocessing steps of DC-kCore:
   degree-bucketed padded representation, splitting degree classes into
   row-tiles whose size is chosen by :func:`autotune_tile_caps` from the
   part's degree/locality profile (the ``max_bucket_rows="auto"`` path).
+* :func:`canonical_slots` / :func:`finalize_key_bin` are the pure per-chunk
+  steps of the streaming CSR build (:mod:`repro.graph.io`): chunk-local
+  canonicalization on the way into the spill store, and per-node-range
+  dedup + degree counting on the way out. Together they reproduce
+  :meth:`Graph.from_edges <repro.graph.structs.Graph.from_edges>`
+  bit-for-bit without ever holding the full edge list.
 """
 from __future__ import annotations
 
@@ -52,6 +58,44 @@ def _degree_classes(deg: np.ndarray):
         members = np.nonzero((deg > lo) & (deg <= width))[0]
         if members.size:
             yield width, members
+
+
+def canonical_slots(src: np.ndarray, dst: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Canonicalize one edge chunk: drop self-loops, emit both directed slots.
+
+    This is the symmetrization step of :meth:`Graph.from_edges` applied to a
+    bounded chunk — no dedup (duplicates across chunks cannot be seen here;
+    :func:`finalize_key_bin` removes them globally). Negative endpoints are
+    rejected immediately so a bad line surfaces at ingest time, not after
+    the whole file has been spilled.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.shape != dst.shape:
+        raise ValueError(f"src/dst shape mismatch: {src.shape} vs {dst.shape}")
+    if src.size and (src.min() < 0 or dst.min() < 0):
+        raise ValueError("edge endpoint out of range")
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    return np.concatenate([src, dst]), np.concatenate([dst, src])
+
+
+def finalize_key_bin(
+    keys: np.ndarray, n_nodes: int, lo: int, hi: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Dedup one node-range bin of packed edge keys into CSR row material.
+
+    ``keys`` are ``u * n_nodes + v`` for every directed slot whose source
+    ``u`` lies in ``[lo, hi)`` (one spill bin of the external dedup).
+    ``np.unique`` sorts them — u-major, v-minor — which is exactly the order
+    :meth:`Graph.from_edges` emits, so concatenating bins over ascending
+    disjoint ranges yields the identical global CSR. Returns
+    ``(row_counts [hi - lo], neighbor_ids int32)``.
+    """
+    uniq = np.unique(np.asarray(keys, dtype=np.int64))
+    u = uniq // n_nodes
+    counts = np.bincount(u - lo, minlength=hi - lo)
+    return counts, (uniq % n_nodes).astype(np.int32)
 
 
 def induced_subgraph(g: Graph, keep_mask: np.ndarray) -> Tuple[Graph, np.ndarray]:

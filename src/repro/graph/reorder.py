@@ -33,6 +33,16 @@ and their coreness is fixed at ``ext`` from the start).
 set bits in the bucket-adjacency bitmap, i.e. how often the static frontier
 filter *cannot* rule out a tile. Lower is better; ``bench_kcore`` fig13
 reports it ordered vs. unordered.
+
+For paper-scale parts the full traversal's working set (frontier arrays +
+the whole CSR) is itself a resource problem, so :func:`sampled_order`
+computes the same BFS/RCM orders from a bounded **edge-sample skeleton**:
+every positive-degree node keeps at least one (and at most
+``edge_budget // n`` evenly-strided) neighbors, so the traversal touches
+``O(max(n, edge_budget))`` slots instead of ``O(m)`` while still producing
+a full, valid permutation. ``reorder_graph(..., sample_edges=...)``
+plumbs it through; the trade is a denser bitmap than the exact order, by a
+bounded factor on the power-law fixtures (pinned in tests).
 """
 from __future__ import annotations
 
@@ -137,25 +147,54 @@ def invert_order(perm: np.ndarray) -> np.ndarray:
     return inv
 
 
-def reorder_graph(g: Graph, method: str = "rcm") -> Graph:
-    """Relabel ``g`` by a locality-aware order, recording the permutation.
+def sample_edge_skeleton(g: Graph, edge_budget: int) -> Graph:
+    """Bounded edge-sample skeleton of ``g`` for out-of-core ordering.
 
-    ``method`` is one of ``"identity"`` (returns ``g`` unchanged), ``"bfs"``
-    or ``"rcm"``. The returned graph's CSR is in the new id space; its
-    ``perm``/``inv_perm`` fields let downstream components translate back,
-    which :func:`~repro.graph.build.bucketize` and both decompose engines do
-    automatically — callers keep original-id semantics throughout.
-
-    Reordering an already-reordered graph is rejected: permutations would
-    have to be composed and no call site needs that.
+    Deterministic per-row strided sampling: every node of degree > 0 keeps
+    ``min(deg, k)`` neighbors at evenly-spaced positions of its (sorted)
+    adjacency row, with ``k = max(1, edge_budget // n_pos)``. Evenly-strided
+    picks cover the row's id span, which is what the orders care about; the
+    per-node floor of one neighbor guarantees no positive-degree node is
+    isolated in the skeleton, so the skeleton traversal places *every* node.
+    Sampled slots number ``<= max(n_pos, edge_budget)``.
     """
-    if method == "identity":
-        return g
-    if method not in REORDER_METHODS:
-        raise ValueError(f"unknown reorder method {method!r}; pick from {REORDER_METHODS}")
-    if g.perm is not None:
-        raise ValueError("graph is already reordered; compose orders explicitly if needed")
-    perm = bfs_order(g) if method == "bfs" else rcm_order(g)
+    deg = g.degrees.astype(np.int64)
+    rows = np.nonzero(deg > 0)[0].astype(np.int64)
+    if rows.size == 0:
+        return Graph.empty(g.n_nodes)
+    k = max(1, int(edge_budget) // rows.size)
+    kv = np.minimum(deg[rows], k)
+    total = int(kv.sum())
+    row_rep = np.repeat(rows, kv)
+    kv_rep = np.repeat(kv, kv)
+    # j-th pick of each row: position floor(j * deg / kv) within the row.
+    j = np.arange(total, dtype=np.int64) - np.repeat(
+        np.concatenate([[0], np.cumsum(kv)[:-1]]), kv
+    )
+    pos = (j * deg[row_rep]) // kv_rep
+    picked = g.indices[g.indptr[row_rep] + pos].astype(np.int64)
+    return Graph.from_edges(row_rep, picked, n_nodes=g.n_nodes)
+
+
+def sampled_order(g: Graph, method: str = "rcm", edge_budget: int = 1 << 20) -> np.ndarray:
+    """BFS/RCM order computed from an edge sample under a slot budget.
+
+    The ROADMAP out-of-core follow-up: the exact orders traverse the full
+    CSR, which at paper scale does not fit next to the part being built.
+    This computes the same traversal on the :func:`sample_edge_skeleton`
+    (``O(max(n, edge_budget))`` slots) and returns a full valid permutation
+    over all ``n`` nodes — nodes isolated in ``g`` are appended at the end
+    exactly as in the exact orders.
+    """
+    if method not in ("bfs", "rcm"):
+        raise ValueError(f"sampled order needs 'bfs' or 'rcm', got {method!r}")
+    skel = sample_edge_skeleton(g, edge_budget)
+    return bfs_order(skel) if method == "bfs" else rcm_order(skel)
+
+
+def permute_graph(g: Graph, perm: np.ndarray) -> Graph:
+    """Relabel ``g``'s CSR by ``perm`` (``perm[new_id] = old_id``),
+    recording ``perm``/``inv_perm`` on the result."""
     inv = invert_order(perm)
     n = g.n_nodes
     # Relabel the symmetric CSR directly — a bijection needs no re-dedup.
@@ -172,6 +211,36 @@ def reorder_graph(g: Graph, method: str = "rcm") -> Graph:
         perm=perm,
         inv_perm=inv,
     )
+
+
+def reorder_graph(g: Graph, method: str = "rcm", sample_edges: Optional[int] = None) -> Graph:
+    """Relabel ``g`` by a locality-aware order, recording the permutation.
+
+    ``method`` is one of ``"identity"`` (returns ``g`` unchanged), ``"bfs"``
+    or ``"rcm"``. The returned graph's CSR is in the new id space; its
+    ``perm``/``inv_perm`` fields let downstream components translate back,
+    which :func:`~repro.graph.build.bucketize` and both decompose engines do
+    automatically — callers keep original-id semantics throughout.
+
+    ``sample_edges`` switches the *ordering computation* to the sampled
+    variant (:func:`sampled_order`) under that slot budget — the traversal's
+    working set stops scaling with ``m``. The relabeling itself still
+    touches the whole CSR (it has to produce the reordered graph).
+
+    Reordering an already-reordered graph is rejected: permutations would
+    have to be composed and no call site needs that.
+    """
+    if method == "identity":
+        return g
+    if method not in REORDER_METHODS:
+        raise ValueError(f"unknown reorder method {method!r}; pick from {REORDER_METHODS}")
+    if g.perm is not None:
+        raise ValueError("graph is already reordered; compose orders explicitly if needed")
+    if sample_edges is not None:
+        perm = sampled_order(g, method, edge_budget=sample_edges)
+    else:
+        perm = bfs_order(g) if method == "bfs" else rcm_order(g)
+    return permute_graph(g, perm)
 
 
 def bitmap_density(bg: BucketedGraph) -> float:

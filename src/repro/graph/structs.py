@@ -55,29 +55,28 @@ class Graph:
         """Build from a (possibly directed / duplicated) edge list.
 
         Self-loops are dropped; the edge set is symmetrized and deduplicated.
+        Expressed through the same chunk-level steps the streaming ingest
+        uses (:func:`~repro.graph.build.canonical_slots` +
+        :func:`~repro.graph.build.finalize_key_bin` over the single bin
+        ``[0, n)``), so the two build paths are bit-identical by
+        construction, not just by test.
         """
+        # Late import: build.py imports this module at load time.
+        from repro.graph.build import canonical_slots, finalize_key_bin
+
         src = np.asarray(src, dtype=np.int64)
         dst = np.asarray(dst, dtype=np.int64)
-        if src.shape != dst.shape:
-            raise ValueError(f"src/dst shape mismatch: {src.shape} vs {dst.shape}")
         if n_nodes is None:
             n_nodes = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
-        keep = src != dst
-        src, dst = src[keep], dst[keep]
-        if src.size and (src.min(initial=0) < 0 or max(src.max(initial=0), dst.max(initial=0)) >= n_nodes):
+        u, v = canonical_slots(src, dst)
+        if u.size and max(u.max(), v.max()) >= n_nodes:
             raise ValueError("edge endpoint out of range")
-        # Symmetrize then dedup via a packed 64-bit key.
-        u = np.concatenate([src, dst])
-        v = np.concatenate([dst, src])
-        key = u * np.int64(n_nodes) + v
-        key = np.unique(key)
-        u = (key // n_nodes).astype(np.int64)
-        v = (key % n_nodes).astype(np.int32)
-        # CSR: `key` is already sorted by (u, v).
-        counts = np.bincount(u, minlength=n_nodes)
+        counts, indices = finalize_key_bin(
+            u * np.int64(n_nodes) + v, int(n_nodes), 0, int(n_nodes)
+        )
         indptr = np.zeros(n_nodes + 1, dtype=np.int64)
         np.cumsum(counts, out=indptr[1:])
-        return Graph(indptr=indptr, indices=v, n_nodes=int(n_nodes))
+        return Graph(indptr=indptr, indices=indices, n_nodes=int(n_nodes))
 
     @staticmethod
     def empty(n_nodes: int) -> "Graph":

@@ -1,0 +1,215 @@
+"""Fault injection for the resumable DC-kCore pipeline.
+
+The paper's stability claim at 136B-edge scale: a crash in part k must not
+forfeit parts 1..k-1. Pinned here:
+
+  * Kill-after-part-1 (an `on_part_done` hook that raises) on the rmat14
+    fixture, resume from the checkpoint dir: coreness is byte-identical to
+    the uninterrupted run and oracle-exact, and only the unfinished parts
+    are re-run.
+  * A half-written `step_*.tmp` directory (what a kill mid-save leaves) is
+    ignored on resume.
+  * A resumed-complete run returns the stored result without re-running.
+  * The checkpoint holds host merge state only (no graph/tiles), and a
+    thresholds mismatch or wrong graph is rejected.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_step
+from repro.core.dckcore import PipelineState, dc_kcore
+from repro.graph.generators import rmat
+from repro.graph.oracle import peel_coreness
+
+
+class SimulatedCrash(Exception):
+    pass
+
+
+def kill_after(part_idx: int):
+    def hook(idx, report):
+        if idx == part_idx:
+            raise SimulatedCrash(f"killed after part {idx}")
+    return hook
+
+
+@pytest.fixture(scope="module")
+def rmat14_graph():
+    """The acceptance fixture: power-law, wide coreness spread (0..~68)."""
+    return rmat(14, 8, seed=7)
+
+
+@pytest.fixture(scope="module")
+def rmat14_runs(rmat14_graph, tmp_path_factory):
+    """One kill/resume cycle on rmat14, shared by the assertions below."""
+    g = rmat14_graph
+    thresholds = (16, 8)
+    ck = str(tmp_path_factory.mktemp("rmat14") / "ck")
+
+    base_core, base_rep = dc_kcore(g, thresholds=thresholds, strategy="rough")
+
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=thresholds, strategy="rough",
+                 checkpoint_dir=ck, on_part_done=kill_after(0))
+    # Simulate a second kill mid-save: a half-written part dir.
+    tmp_dir = os.path.join(ck, "step_00000002.tmp")
+    os.makedirs(tmp_dir)
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        f.write("{ half written")
+
+    res_core, res_rep = dc_kcore(g, thresholds=thresholds, strategy="rough",
+                                 checkpoint_dir=ck, resume=True)
+    return dict(g=g, thresholds=thresholds, ck=ck,
+                base_core=base_core, base_rep=base_rep,
+                res_core=res_core, res_rep=res_rep)
+
+
+def test_resume_is_byte_identical_and_oracle_exact(rmat14_runs):
+    r = rmat14_runs
+    np.testing.assert_array_equal(r["res_core"], r["base_core"])
+    np.testing.assert_array_equal(r["res_core"], peel_coreness(r["g"]))
+    assert r["res_core"].dtype == r["base_core"].dtype
+
+
+def test_resume_skips_finished_parts_and_ignores_tmp(rmat14_runs):
+    r = rmat14_runs
+    # Part 1 was restored, not re-run (resume started from step 1, not from
+    # the junk .tmp), and the junk was reclaimed by part 2's atomic save —
+    # .tmp dirs are never restored from, only overwritten.
+    assert r["res_rep"].resumed_parts == 1
+    assert [p.name for p in r["res_rep"].parts] == [p.name for p in r["base_rep"].parts]
+    assert latest_step(r["ck"]) == len(r["thresholds"]) + 1
+    assert not os.path.exists(os.path.join(r["ck"], "step_00000002.tmp"))
+    # Retention: only the latest boundary is kept on disk (state is O(n)).
+    steps = sorted(d for d in os.listdir(r["ck"]) if d.startswith("step_"))
+    assert steps == [f"step_{len(r['thresholds']) + 1:08d}"]
+
+
+def test_resume_of_complete_run_returns_stored_result(rmat14_runs):
+    r = rmat14_runs
+    core, rep = dc_kcore(r["g"], thresholds=r["thresholds"], strategy="rough",
+                         checkpoint_dir=r["ck"], resume=True)
+    np.testing.assert_array_equal(core, r["base_core"])
+    assert rep.resumed_parts == len(r["res_rep"].parts)
+    assert rep.total_iterations == r["res_rep"].total_iterations  # restored reports
+
+
+def test_checkpoint_holds_host_state_only(rmat14_runs):
+    """What's in the checkpoint: the four merge arrays + JSON extra. What's
+    not: the remaining graph, tiles, or anything device-shaped."""
+    r = rmat14_runs
+    step_dir = os.path.join(r["ck"], f"step_{latest_step(r['ck']):08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    stems = sorted(name.split("__")[0] for name in manifest["files"])
+    assert stems == ["coreness", "ext_remaining", "finalized", "remaining_ids"]
+    extra = manifest["extra"]
+    assert extra["complete"] and extra["parts_done"] == len(r["thresholds"])
+    assert [int(t) for t in extra["thresholds"]] == sorted(r["thresholds"], reverse=True)
+    assert len(extra["reports"]) == len(r["res_rep"].parts)
+
+
+def test_stale_checkpoints_purged_by_fresh_run(tmp_path):
+    """A fresh (non-resume) run in a previously-used dir removes stale
+    steps, so resume cannot restore a different run's state."""
+    ck = str(tmp_path / "ck")
+    g_a = rmat(10, 8, seed=3)
+    dc_kcore(g_a, thresholds=(8, 4), checkpoint_dir=ck)  # 3 steps on disk
+    g_b = rmat(10, 8, seed=21)  # same n, different graph
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g_b, thresholds=(8, 4), checkpoint_dir=ck,
+                 on_part_done=kill_after(0))
+    # Only run B's first boundary remains; no stale A steps above it.
+    steps = sorted(d for d in os.listdir(ck) if d.startswith("step_"))
+    assert steps == ["step_00000001"]
+    core, rep = dc_kcore(g_b, thresholds=(8, 4), checkpoint_dir=ck, resume=True)
+    np.testing.assert_array_equal(core, peel_coreness(g_b))
+    assert rep.resumed_parts == 1
+
+
+def test_resume_rejects_different_graph_same_node_count(tmp_path):
+    ck = str(tmp_path / "ck")
+    g_a = rmat(10, 8, seed=3)
+    dc_kcore(g_a, thresholds=(8,), checkpoint_dir=ck)
+    g_b = rmat(10, 8, seed=21)
+    assert g_a.n_nodes == g_b.n_nodes
+    with pytest.raises(ValueError, match="different graph"):
+        dc_kcore(g_b, thresholds=(8,), checkpoint_dir=ck, resume=True)
+
+
+def test_threshold_and_graph_mismatch_rejected(rmat14_runs):
+    r = rmat14_runs
+    with pytest.raises(ValueError, match="thresholds"):
+        dc_kcore(r["g"], thresholds=(32,), strategy="rough",
+                 checkpoint_dir=r["ck"], resume=True)
+    with pytest.raises(ValueError, match="node"):
+        dc_kcore(rmat(8, 4, seed=1), thresholds=r["thresholds"],
+                 checkpoint_dir=r["ck"], resume=True)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        dc_kcore(r["g"], resume=True)
+
+
+def test_resume_with_empty_dir_runs_fresh(tmp_path):
+    g = rmat(10, 8, seed=3)
+    core, rep = dc_kcore(g, thresholds=(8,), checkpoint_dir=str(tmp_path / "ck"),
+                         resume=True)
+    np.testing.assert_array_equal(core, peel_coreness(g))
+    assert rep.resumed_parts == 0
+    assert all(p.save_time_s > 0 for p in rep.parts)
+
+
+def test_kill_at_every_part_boundary(tmp_path):
+    """Crash after each part in turn; every resume lands oracle-exact."""
+    g = rmat(10, 8, seed=11)
+    thresholds = (16, 4)
+    oracle = peel_coreness(g)
+    base, _ = dc_kcore(g, thresholds=thresholds)
+    n_parts = 3  # core>=16, core>=4, rest
+    for k in range(n_parts):
+        ck = str(tmp_path / f"ck{k}")
+        with pytest.raises(SimulatedCrash):
+            dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                     on_part_done=kill_after(k))
+        core, rep = dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                             resume=True)
+        np.testing.assert_array_equal(core, base)
+        np.testing.assert_array_equal(core, oracle)
+        assert rep.resumed_parts == k + 1
+
+
+@pytest.mark.slow
+def test_kill_and_resume_paper_shaped(tmp_path):
+    """Scheduled-only: the same fault-injection cycle on the largest bench
+    fixture (rmat15, budget-planned thresholds) — paper-shaped part counts
+    and a multi-minute budget the tier-1 suite shouldn't pay."""
+    from repro.core.divide import plan_thresholds
+
+    g = rmat(15, 16, seed=3)
+    thresholds = plan_thresholds(g, g.memory_bytes() // 3) or [24]
+    ck = str(tmp_path / "ck")
+    base, _ = dc_kcore(g, thresholds=thresholds, strategy="rough")
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=thresholds, strategy="rough",
+                 checkpoint_dir=ck, on_part_done=kill_after(0))
+    core, rep = dc_kcore(g, thresholds=thresholds, strategy="rough",
+                         checkpoint_dir=ck, resume=True)
+    np.testing.assert_array_equal(core, base)
+    np.testing.assert_array_equal(core, peel_coreness(g))
+    assert rep.resumed_parts >= 1
+
+
+def test_pipeline_state_roundtrip(tmp_path):
+    """PipelineState save/restore is exact on arrays, cursor and reports."""
+    g = rmat(9, 6, seed=2)
+    ck = str(tmp_path / "ck")
+    _, rep = dc_kcore(g, thresholds=(8,), checkpoint_dir=ck)
+    state = PipelineState.restore(ck, g.n_nodes)
+    assert state.complete and state.parts_done == 1
+    assert state.coreness.dtype == np.int32 and state.finalized.dtype == bool
+    np.testing.assert_array_equal(state.coreness, peel_coreness(g))
+    assert (state.finalized).all()
+    assert [p.name for p in state.reports] == [p.name for p in rep.parts]
+    assert state.remaining_ids.size == 0 and state.ext_remaining.size == 0

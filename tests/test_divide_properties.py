@@ -1,0 +1,157 @@
+"""Property-based tests for the Divide step (hypothesis).
+
+Pinned properties (paper Section 4.2 + the resource planner):
+
+  * `exact_candidates` == an independent scalar peeling oracle for the
+    generalized t-core with external information (Definition 3 analog).
+  * `rough_candidates` is always a superset of `exact_candidates`.
+  * `plan_thresholds` emits strictly decreasing thresholds > 1, at most
+    `max_parts - 1` of them, and never plans a part whose padded edge
+    estimate exceeds the budget — except the unavoidable case of a part
+    that is a single equal-degree run (indivisible by a degree threshold).
+
+Seeded (hypothesis-free) ports of the same properties — plus the
+duplicate-threshold regression — live in tests/test_kcore_properties.py so
+the invariants stay covered when hypothesis is absent.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; seeded ports of the divide properties "
+    "run in tests/test_kcore_properties.py",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.divide import (  # noqa: E402
+    exact_candidates,
+    plan_thresholds,
+    rough_candidates,
+)
+from repro.graph.structs import Graph  # noqa: E402
+
+
+def tcore_oracle(g: Graph, ext: np.ndarray, t: int) -> np.ndarray:
+    """Scalar peeling oracle for the generalized t-core: repeatedly delete
+    any node with deg_alive(v) + ext(v) < t (ext neighbors behave as
+    infinite-coreness, Corollary 1 analog)."""
+    alive = np.ones(g.n_nodes, dtype=bool)
+    while True:
+        removed = False
+        for v in range(g.n_nodes):
+            if not alive[v]:
+                continue
+            d = int(alive[g.neighbors(v)].sum()) + int(ext[v])
+            if d < t:
+                alive[v] = False
+                removed = True
+        if not removed:
+            return alive
+
+
+@st.composite
+def graph_ext_t(draw):
+    n = draw(st.integers(min_value=1, max_value=28))
+    m = draw(st.integers(min_value=0, max_value=3 * n))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    g = Graph.from_edges(
+        rng.integers(0, n, size=m), rng.integers(0, n, size=m), n_nodes=n
+    )
+    ext = rng.integers(0, 5, size=n).astype(np.int32)
+    t = draw(st.integers(min_value=1, max_value=10))
+    return g, ext, t
+
+
+@given(data=graph_ext_t())
+@settings(max_examples=120, deadline=None)
+def test_exact_candidates_is_generalized_tcore(data):
+    g, ext, t = data
+    np.testing.assert_array_equal(exact_candidates(g, ext, t), tcore_oracle(g, ext, t))
+
+
+@given(data=graph_ext_t())
+@settings(max_examples=120, deadline=None)
+def test_rough_is_superset_of_exact(data):
+    g, ext, t = data
+    rough = rough_candidates(g.degrees, ext, t)
+    exact = exact_candidates(g, ext, t)
+    assert (rough | ~exact).all()  # exact -> rough
+
+
+def planned_part_estimates(deg: np.ndarray, thresholds, bytes_per_edge: int):
+    """(estimate_bytes, degree_span) of every *planned* part — nodes with
+    deg >= t_k below the previous cut; the implicit 'rest' is not planned."""
+    deg = np.sort(np.asarray(deg, dtype=np.int64))[::-1]
+    out = []
+    hi = np.inf
+    for t in thresholds:
+        sel = deg[(deg >= t) & (deg < hi)]
+        out.append((int(sel.sum()) * bytes_per_edge, int(sel.max() - sel.min()) if sel.size else 0))
+        hi = t
+    return out
+
+
+@given(
+    degs=st.lists(st.integers(min_value=0, max_value=60), min_size=1, max_size=120),
+    budget=st.integers(min_value=1, max_value=4000),
+    max_parts=st.integers(min_value=2, max_value=8),
+)
+@settings(max_examples=200, deadline=None)
+def test_plan_thresholds_respects_budget(degs, budget, max_parts):
+    deg = np.array(degs, dtype=np.int64)
+    bpe = 8
+    ts = plan_thresholds(deg, budget, max_parts=max_parts, bytes_per_edge=bpe)
+    assert all(t > 1 for t in ts)
+    assert all(a > b for a, b in zip(ts, ts[1:]))  # strictly decreasing
+    assert len(ts) <= max_parts - 1
+    if int(deg.sum()) * bpe <= budget:
+        assert ts == []
+    elif (deg > 1).any():
+        # Division was needed and possible: the planner must divide.
+        assert ts != []
+    for est, span in planned_part_estimates(deg, ts, bpe):
+        # Within budget, or a single indivisible equal-degree run.
+        assert est <= budget or span == 0
+
+
+def greedy_run_packing(deg, budget, max_parts, bpe):
+    """Independent reference: pack descending equal-degree runs greedily;
+    cut before the run that would overflow a non-empty part. This is what
+    the planner must compute — the old duplicate-degree early-`break`
+    truncated it."""
+    values, counts = np.unique(np.asarray(deg, dtype=np.int64), return_counts=True)
+    runs = [(int(v), int(v) * int(c) * bpe) for v, c in zip(values[::-1], counts[::-1])]
+    if sum(b for _, b in runs) <= budget:
+        return []
+    ts, acc, prev = [], 0, None
+    for v, b in runs:
+        if v <= 1:
+            break
+        if acc > 0 and acc + b > budget:
+            ts.append(prev)
+            acc = 0
+            if len(ts) >= max_parts - 1:
+                break
+        acc += b
+        prev = v
+    if (acc > 0 and prev is not None and prev > 1
+            and len(ts) < max_parts - 1 and (not ts or prev < ts[-1])):
+        ts.append(prev)  # close the trailing group off the deg<=1 rest
+    return ts
+
+
+@given(
+    degs=st.lists(st.integers(min_value=0, max_value=40), min_size=2, max_size=80),
+    budget=st.integers(min_value=16, max_value=2000),
+    max_parts=st.integers(min_value=2, max_value=8),
+)
+@settings(max_examples=200, deadline=None)
+def test_plan_thresholds_survives_duplicate_runs(degs, budget, max_parts):
+    """Regression shape for the old early-`break`: heavy duplicate runs must
+    not terminate planning early — the plan equals greedy run-packing."""
+    deg = np.repeat(np.array(degs, dtype=np.int64), 3)  # force duplicates
+    ts = plan_thresholds(deg, budget, max_parts=max_parts, bytes_per_edge=8)
+    assert len(set(ts)) == len(ts)  # no duplicate thresholds, ever
+    assert ts == greedy_run_packing(deg, budget, max_parts, 8)

@@ -24,6 +24,7 @@ import pytest
 
 from repro.core.decompose import decompose
 from repro.core.dckcore import dc_kcore
+from repro.core.divide import exact_candidates, plan_thresholds, rough_candidates
 from repro.core.hindex import hindex_brute, hindex_count, hindex_sorted
 from repro.graph.build import bucketize
 from repro.graph.oracle import peel_coreness
@@ -182,3 +183,82 @@ def test_frontier_resume_from_snapshot(rmat_graph):
     decompose(bg, max_iter=3, on_sweep=lambda it, c: snap.update(c=np.asarray(c)))
     res = decompose(bg, init_coreness=snap["c"])
     np.testing.assert_array_equal(res.coreness, peel_coreness(rmat_graph))
+
+
+# --------------------------------------------------------------------- #
+# Divide-step properties, seeded ports (hypothesis versions live in
+# tests/test_divide_properties.py)
+# --------------------------------------------------------------------- #
+def _tcore_oracle(g: Graph, ext: np.ndarray, t: int) -> np.ndarray:
+    """Scalar peeling oracle for the generalized t-core with ext credit."""
+    alive = np.ones(g.n_nodes, dtype=bool)
+    while True:
+        removed = False
+        for v in range(g.n_nodes):
+            if alive[v] and int(alive[g.neighbors(v)].sum()) + int(ext[v]) < t:
+                alive[v] = False
+                removed = True
+        if not removed:
+            return alive
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_exact_candidates_match_tcore_oracle_seeded(seed):
+    rng = np.random.default_rng(300 + seed)
+    n = int(rng.integers(2, 30))
+    m = int(rng.integers(0, 3 * n))
+    g = Graph.from_edges(
+        rng.integers(0, n, size=m), rng.integers(0, n, size=m), n_nodes=n
+    )
+    ext = rng.integers(0, 5, size=n).astype(np.int32)
+    t = int(rng.integers(1, 9))
+    exact = exact_candidates(g, ext, t)
+    np.testing.assert_array_equal(exact, _tcore_oracle(g, ext, t))
+    rough = rough_candidates(g.degrees, ext, t)
+    assert (rough | ~exact).all()  # rough is a superset of exact
+
+
+def test_plan_thresholds_duplicate_run_regression():
+    """The old planner `break`-ed when the overflow landed on a repeated
+    degree value, silently under-dividing heavy-tailed graphs. With runs
+    [5x4, 3x4, 2x4] and a 6-byte budget it planned only [5]; run-packing
+    must cut again at 3 (and cut the trailing over-budget 2-run off the
+    rest too)."""
+    deg = np.array([5] * 4 + [3] * 4 + [2] * 4, dtype=np.int64)
+    ts = plan_thresholds(deg, part_budget_bytes=6, bytes_per_edge=1)
+    assert ts == [5, 3, 2]
+    # A trailing over-budget run must be cut off from the degree<=1 tail,
+    # not silently merged into the rest part (near-regular graph shape).
+    deg_tail = np.array([3] * 6 + [1] * 10, dtype=np.int64)
+    assert plan_thresholds(deg_tail, part_budget_bytes=4, bytes_per_edge=1) == [3]
+    # Same shape but as a real graph path: thresholds planned off a star-rich
+    # degree profile keep dc_kcore oracle-exact.
+    rng = np.random.default_rng(9)
+    g = Graph.from_edges(rng.integers(0, 40, 160), rng.integers(0, 40, 160), n_nodes=40)
+    ts_g = plan_thresholds(g, g.memory_bytes() // 3)
+    core, _ = dc_kcore(g, thresholds=ts_g, strategy="rough")
+    np.testing.assert_array_equal(core, peel_coreness(g))
+
+
+def test_plan_thresholds_budget_and_shape_seeded():
+    bpe = 8
+    for seed in range(12):
+        rng = np.random.default_rng(400 + seed)
+        deg = rng.integers(0, 50, size=int(rng.integers(2, 120))).astype(np.int64)
+        budget = int(rng.integers(16, 3000))
+        max_parts = int(rng.integers(2, 9))
+        ts = plan_thresholds(deg, budget, max_parts=max_parts, bytes_per_edge=bpe)
+        assert all(t > 1 for t in ts)
+        assert all(a > b for a, b in zip(ts, ts[1:]))
+        assert len(ts) <= max_parts - 1
+        sdeg = np.sort(deg)[::-1]
+        if int(sdeg.sum()) * bpe <= budget:
+            assert ts == []
+        elif (sdeg > 1).any():
+            assert ts != []  # division needed and possible -> divide
+        hi = np.inf
+        for t in ts:
+            part = sdeg[(sdeg >= t) & (sdeg < hi)]
+            # Planned parts fit the budget unless indivisible (single run).
+            assert int(part.sum()) * bpe <= budget or part.max() == part.min()
+            hi = t

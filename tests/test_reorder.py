@@ -25,6 +25,8 @@ from repro.graph.reorder import (
     neighbor_spans,
     rcm_order,
     reorder_graph,
+    sample_edge_skeleton,
+    sampled_order,
 )
 from repro.graph.structs import Graph
 
@@ -159,3 +161,65 @@ def test_bucketize_ext_permutation(rmat_graph):
     res_id = decompose(bucketize(g, ext=ext))
     res_bfs = decompose(bg)
     np.testing.assert_array_equal(res_bfs.coreness, res_id.coreness)
+
+
+# --------------------------------------------------------------------- #
+# Sampled (out-of-core) ordering
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("budget", [64, 2048, 1 << 22])
+def test_sampled_order_is_valid_permutation(any_graph, method, budget):
+    g = any_graph
+    perm = sampled_order(g, method, edge_budget=budget)
+    np.testing.assert_array_equal(np.sort(perm), np.arange(g.n_nodes))
+    # Deterministic: strided sampling has no RNG.
+    np.testing.assert_array_equal(perm, sampled_order(g, method, edge_budget=budget))
+
+
+def test_sample_skeleton_bounded_and_covering(rmat_graph):
+    g = rmat_graph
+    for budget in (256, 4096):
+        sk = sample_edge_skeleton(g, budget)
+        assert sk.n_nodes == g.n_nodes
+        # Bounded: at most max(n_pos, budget) sampled slots before
+        # symmetrization -> at most 2x that many directed slots.
+        n_pos = int((g.degrees > 0).sum())
+        assert sk.indices.size <= 2 * max(n_pos, budget)
+        # Covering: every positive-degree node keeps at least one neighbor.
+        np.testing.assert_array_equal(sk.degrees > 0, g.degrees > 0)
+        # Every skeleton edge is a real edge.
+        rng = np.random.default_rng(1)
+        for v in rng.integers(0, g.n_nodes, size=30):
+            assert set(sk.neighbors(v).tolist()) <= set(g.neighbors(v).tolist())
+
+
+def test_sampled_order_full_budget_equals_exact(rmat_graph):
+    """With a per-node cap >= max degree the skeleton is the whole graph:
+    the sampled order degrades gracefully to the exact one."""
+    g = rmat_graph
+    n_pos = int((g.degrees > 0).sum())
+    budget = n_pos * int(g.degrees.max())  # k = budget // n_pos >= max_deg
+    np.testing.assert_array_equal(sampled_order(g, "rcm", edge_budget=budget), rcm_order(g))
+    np.testing.assert_array_equal(sampled_order(g, "bfs", edge_budget=budget), bfs_order(g))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_sampled_reorder_coreness_and_density(rmat_graph, method):
+    """Sampled ordering keeps oracle exactness and lands within a bounded
+    factor of the exact order's bitmap density (and never above identity)."""
+    g = rmat_graph
+    rg = reorder_graph(g, method, sample_edges=2048)
+    res = decompose(bucketize(rg))
+    np.testing.assert_array_equal(res.coreness, peel_coreness(g))
+    d_sampled = bitmap_density(bucketize(rg))
+    d_full = bitmap_density(bucketize(reorder_graph(g, method)))
+    d_id = bitmap_density(bucketize(g))
+    assert d_sampled <= d_id
+    assert d_sampled <= 1.25 * d_full  # measured ~1.02-1.08x on this fixture
+
+
+def test_dckcore_sampled_reorder_matches_oracle(rmat_graph):
+    core, report = dc_kcore(rmat_graph, thresholds=(4, 12), reorder="rcm",
+                            reorder_sample_edges=1024)
+    np.testing.assert_array_equal(core, peel_coreness(rmat_graph))
+    assert all(0.0 < p.bitmap_density <= 1.0 for p in report.parts)
