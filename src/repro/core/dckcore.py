@@ -37,6 +37,24 @@ through :func:`repro.ckpt.save_pytree` after every part, and
 * a killed run leaves at most a ``step_*.tmp`` directory, which restore
   ignores — resume always starts from the last *complete* part boundary
   and reproduces byte-identical coreness (every stage is deterministic).
+
+**Sweep-granularity checkpointing.** A part boundary is a coarse resume
+unit — a part at paper scale sweeps for hours. ``sweep_checkpoint_every=k``
+saves a :class:`SweepSnapshot` (the conquer engine's estimate vector, fed
+by its ``on_sweep`` hook) every ``k`` sweeps through the same atomic
+``CheckpointManager`` path under ``<checkpoint_dir>/sweeps``; resume then
+re-enters *mid-part* at the last completed sweep via ``init_coreness`` —
+the fixed point is exact from any valid upper bound, so the final coreness
+stays byte-identical. Stale or half-written snapshots are detected
+(cursor/fingerprint/plan/part-size validation) and resume falls back to
+the part boundary; snapshots of a finished part are purged at its
+boundary save, so disk stays bounded at one state + one snapshot.
+
+**Divide transient.** All extraction passes between parts run chunked
+(``divide_chunk`` adjacency slots, default
+:data:`~repro.graph.build.DEFAULT_DIVIDE_CHUNK_SLOTS`), so the host
+transient of the divide step is bounded by the chunk budget — never by
+the edge count — and each part reports its observed peak.
 """
 from __future__ import annotations
 
@@ -52,11 +70,18 @@ import numpy as np
 
 from repro.core.decompose import DecomposeResult, decompose
 from repro.core.divide import timed_candidates
-from repro.graph.build import bucketize, external_info, induced_subgraph
+from repro.graph.build import (
+    DivideStats,
+    _resolve_chunk_slots,
+    bucketize,
+    external_info,
+    induced_subgraph,
+)
 from repro.graph.reorder import bitmap_density, reorder_graph
 from repro.graph.structs import BucketedGraph, Graph
 
 STATE_FORMAT = 1
+SWEEP_FORMAT = 1
 
 
 def graph_fingerprint(g: Graph) -> Dict[str, int]:
@@ -109,6 +134,13 @@ class PartReport:
     bitmap_density: float = 1.0
     # Wall time of the atomic per-part checkpoint save (0 when disabled).
     save_time_s: float = 0.0
+    # Peak transient host bytes of the part's divide passes (candidate
+    # extraction + induced subgraph + ext fold + shrink), bounded by the
+    # chunk budget — see repro.graph.build.DivideStats.
+    divide_transient_bytes: int = 0
+    # Sweep number the part's conquer was warm-restarted at from a
+    # sweep-granularity snapshot (0 = started from scratch).
+    resumed_at_sweep: int = 0
 
 
 @dataclasses.dataclass
@@ -266,8 +298,124 @@ class PipelineState:
         )
 
 
-DecomposeFn = Callable[[BucketedGraph], DecomposeResult]
+def _sweep_dir(checkpoint_dir: str) -> str:
+    return os.path.join(checkpoint_dir, "sweeps")
+
+
+@dataclasses.dataclass
+class SweepSnapshot:
+    """Mid-part checkpoint: one conquer sweep's coreness estimates.
+
+    The conquer engines' fixed point is restartable from ANY valid upper
+    bound of the true coreness, so a snapshot of the estimate vector taken
+    by the ``on_sweep`` hook is a complete mid-part resume point: re-enter
+    the part with ``init_coreness=snapshot`` and the remaining sweeps run
+    to the same (exact) fixed point — final coreness is byte-identical to
+    the uninterrupted run no matter where the crash landed.
+
+    Saved through the same atomic ``CheckpointManager`` path as
+    :class:`PipelineState`, under ``<checkpoint_dir>/sweeps`` with the
+    sweep number as the step (monotone across crash/resume cycles: a
+    resumed part offsets its sweep numbering by the restored snapshot's),
+    retention one. A snapshot is only *valid* for the part it was taken in:
+    restore checks the pipeline cursor, graph fingerprint, threshold plan
+    and part size, and anything stale — a snapshot from an already-finished
+    part, another run, or a half-written ``.tmp`` — is ignored, falling
+    back to the part-boundary checkpoint. Snapshots of a finished part are
+    purged at its boundary save, so disk stays bounded at one snapshot.
+
+    ``coreness`` is numpy int32 in **part-local original-id order** (what
+    ``on_sweep`` hands out), so a snapshot taken under one engine, node
+    ordering or tile policy restarts correctly under any other.
+    """
+
+    coreness: np.ndarray       # [n_part] int32, part-local original order
+    parts_done: int            # pipeline cursor when taken
+    sweep: int                 # sweep number within the part
+    n_part: int
+    threshold: Optional[int]   # None for the rest part
+    thresholds: List[int]
+    fingerprint: Dict[str, int]
+
+    # Step numbering must be monotone across the WHOLE run, not just within
+    # a part: CheckpointManager(keep=1) retains the highest-numbered step,
+    # so if a later part's snapshots restarted at step 1, one stale
+    # higher-numbered snapshot surviving a crash between a boundary save
+    # and the sweeps purge would win the GC and silently swallow every new
+    # save. parts_done-major, sweep-minor ordering closes that window.
+    _PART_STRIDE = 1 << 40
+
+    @property
+    def step(self) -> int:
+        return self.parts_done * SweepSnapshot._PART_STRIDE + self.sweep
+
+    def save(self, sweep_dir: str) -> float:
+        from repro.ckpt import CheckpointManager
+
+        t0 = time.time()
+        extra = {
+            "format": SWEEP_FORMAT,
+            "parts_done": int(self.parts_done),
+            "sweep": int(self.sweep),
+            "n_part": int(self.n_part),
+            "threshold": None if self.threshold is None else int(self.threshold),
+            "thresholds": [int(t) for t in self.thresholds],
+            "fingerprint": dict(self.fingerprint),
+        }
+        CheckpointManager(sweep_dir, keep=1).save(
+            {"part_coreness": np.asarray(self.coreness, dtype=np.int32)},
+            self.step, extra=extra, blocking=True,
+        )
+        return time.time() - t0
+
+    @staticmethod
+    def restore(sweep_dir: str) -> Optional["SweepSnapshot"]:
+        """Latest complete snapshot under ``sweep_dir``; ``None`` when there
+        is none or it is unreadable/from another format — sweep snapshots
+        are an optimization, so a bad one degrades to part-boundary resume
+        instead of failing the run."""
+        from repro.ckpt import latest_step, restore_pytree
+
+        if latest_step(sweep_dir) is None:
+            return None
+        try:
+            arrays, _step, extra = restore_pytree(
+                sweep_dir, {"part_coreness": np.zeros(0, np.int32)}
+            )
+        except Exception:
+            return None
+        if extra.get("format") != SWEEP_FORMAT:
+            return None
+        return SweepSnapshot(
+            coreness=arrays["part_coreness"],
+            parts_done=int(extra["parts_done"]),
+            sweep=int(extra["sweep"]),
+            n_part=int(extra["n_part"]),
+            threshold=(None if extra["threshold"] is None else int(extra["threshold"])),
+            thresholds=[int(t) for t in extra["thresholds"]],
+            fingerprint={k: int(v) for k, v in extra["fingerprint"].items()},
+        )
+
+    def matches(self, state: "PipelineState", cursor: int,
+                n_part: int, threshold: Optional[int]) -> bool:
+        """Is this snapshot a resume point for the part about to run?"""
+        return (
+            self.parts_done == cursor
+            and self.n_part == n_part == self.coreness.shape[0]
+            and self.threshold == threshold
+            and self.thresholds == state.thresholds
+            and self.fingerprint == state.fingerprint
+        )
+
+
+# Conquer-engine adapter. Called as ``fn(bg)`` normally; when
+# ``dc_kcore(sweep_checkpoint_every=...)`` is set it is called as
+# ``fn(bg, init_coreness=..., on_sweep=...)`` — a custom engine must accept
+# those kwargs (both built-in engines and make_distributed_decompose do;
+# a plain ``lambda bg: ...`` only works without sweep checkpointing).
+DecomposeFn = Callable[..., DecomposeResult]
 PartHook = Callable[[int, PartReport], None]
+SweepSavedHook = Callable[[int, int, float], None]
 
 
 def dc_kcore(
@@ -282,13 +430,19 @@ def dc_kcore(
     checkpoint_dir: Optional[str] = None,
     resume: bool = False,
     on_part_done: Optional[PartHook] = None,
+    divide_chunk: Optional[int] = None,
+    sweep_checkpoint_every: Optional[int] = None,
+    on_sweep_saved: Optional[SweepSavedHook] = None,
 ) -> tuple[np.ndarray, DCKCoreReport]:
     """Run DC-kCore. ``thresholds=()`` degenerates to the monolithic baseline
     (= the PSGraph competitor in the paper's tables).
 
     ``decompose_fn`` lets callers swap the conquer engine (single-device jit,
     Pallas-kernel, or the distributed shard_map engine) without touching the
-    divide/merge logic.
+    divide/merge logic. With ``sweep_checkpoint_every`` set it is invoked as
+    ``decompose_fn(bg, init_coreness=..., on_sweep=...)``, so a custom engine
+    must accept those kwargs (see :data:`DecomposeFn`); without the flag it
+    is always called as plain ``decompose_fn(bg)``.
 
     ``reorder`` (``"identity"`` / ``"bfs"`` / ``"rcm"``) applies a
     locality-aware node ordering to *each part* before bucketizing it: the
@@ -302,6 +456,15 @@ def dc_kcore(
     forwarded to :func:`~repro.graph.build.bucketize` (``"auto"`` = the
     degree-profile tile autotuner).
 
+    ``divide_chunk`` bounds the divide step's transient host bytes: every
+    extraction pass (candidates, induced subgraph, ext fold, shrink — and
+    the resume-time remaining-graph rebuild) runs chunked over CSR row
+    ranges of at most that many adjacency slots, bit-identical to the
+    unchunked result at every chunk size (``None`` = the
+    :data:`~repro.graph.build.DEFAULT_DIVIDE_CHUNK_SLOTS` budget — the
+    divide transient is *always* bounded; the knob only sizes it). Each
+    part's observed peak rides in ``PartReport.divide_transient_bytes``.
+
     ``checkpoint_dir`` enables per-part checkpointing: the
     :class:`PipelineState` is saved atomically after every part, and
     ``resume=True`` restores the latest complete checkpoint and re-enters at
@@ -310,24 +473,48 @@ def dc_kcore(
     (``hook(part_index, report)``) fires after each part's save — the
     fault-injection tests raise from it to simulate a crash at the worst
     moment (state saved, next part not started).
+
+    ``sweep_checkpoint_every=k`` (requires ``checkpoint_dir``) additionally
+    saves a :class:`SweepSnapshot` every ``k`` conquer sweeps through the
+    same atomic path; ``resume=True`` (with the flag still set) then
+    re-enters *mid-part* at the last completed sweep via the engines'
+    ``init_coreness`` warm restart — still byte-identical, because the
+    fixed point is exact from any snapshot. A stale or unreadable snapshot
+    (finished part, other run, half-written ``.tmp``) is ignored and resume
+    falls back to the part boundary. ``on_sweep_saved``
+    (``hook(part_cursor, sweep, save_seconds)``) fires after each snapshot
+    save — the mid-sweep fault-injection tests crash from it.
     """
     if decompose_fn is None:
-        decompose_fn = lambda bg: decompose(bg)  # noqa: E731
+        decompose_fn = lambda bg, **kw: decompose(bg, **kw)  # noqa: E731
     if resume and checkpoint_dir is None:
         raise ValueError("resume=True requires checkpoint_dir")
+    if sweep_checkpoint_every is not None and checkpoint_dir is None:
+        raise ValueError("sweep_checkpoint_every requires checkpoint_dir")
     thresholds = sorted(set(int(t) for t in thresholds), reverse=True)
     t_start = time.time()
 
     n = g.n_nodes
     state: Optional[PipelineState] = None
     resumed_parts = 0
+    sweep_dir = _sweep_dir(checkpoint_dir) if checkpoint_dir is not None else None
+    pending_snap: Optional[SweepSnapshot] = None
     if resume:
         state = PipelineState.restore(checkpoint_dir, n)
+        if sweep_checkpoint_every is not None:
+            # Mid-part resume point — consulted even when no part boundary
+            # exists yet (a run killed during part 0 leaves only sweep
+            # snapshots), and validated against the part it claims to
+            # belong to at the moment that part runs.
+            pending_snap = SweepSnapshot.restore(sweep_dir)
     if state is None:
-        if checkpoint_dir is not None:
-            # Fresh run: purge stale steps from any previous run in this
-            # dir, so a later resume can only see this run's boundaries.
+        if checkpoint_dir is not None and not resume:
+            # Fresh run: purge stale steps (and sweep snapshots) from any
+            # previous run in this dir, so a later resume can only see this
+            # run's boundaries. A resume that found no boundary keeps the
+            # dir as is — snapshot validation screens anything stale.
             _clear_checkpoints(checkpoint_dir)
+            _clear_checkpoints(sweep_dir)
         state = PipelineState.fresh(g, thresholds)
         remaining_graph = g
     else:
@@ -353,7 +540,9 @@ def dc_kcore(
         # Rebuild the remaining graph from the original + finalized mask.
         # Induced-subgraph composition is byte-stable (monotone relabeling
         # of a sorted CSR), so this equals the incrementally shrunk graph.
-        remaining_graph, keep_ids = induced_subgraph(g, ~state.finalized)
+        remaining_graph, keep_ids = induced_subgraph(
+            g, ~state.finalized, chunk_slots=divide_chunk
+        )
         assert np.array_equal(keep_ids, state.remaining_ids), (
             "checkpoint remaining-id map inconsistent with finalized mask"
         )
@@ -362,8 +551,8 @@ def dc_kcore(
     preprocess = 0.0
 
     def run_part(part_g: Graph, part_ext: np.ndarray, name: str,
-                 threshold: Optional[int], extract_time: float):
-        nonlocal preprocess
+                 threshold: Optional[int], extract_time: float, cursor: int):
+        nonlocal preprocess, pending_snap
         t0 = time.time()
         # Reorder the part, not the whole graph: each part is a fresh id
         # space, and locality only has to hold within the tiles actually
@@ -373,13 +562,56 @@ def dc_kcore(
             reorder_graph(part_g, reorder, sample_edges=reorder_sample_edges),
             ext=part_ext, row_align=row_align, max_bucket_rows=max_bucket_rows,
         )
+        init = None
+        start_sweep = 0
+        if pending_snap is not None:
+            if pending_snap.matches(state, cursor, part_g.n_nodes, threshold):
+                init = pending_snap.coreness
+                start_sweep = pending_snap.sweep
+            else:
+                # Stale (e.g. a crash landed between a boundary save and
+                # the sweeps purge): remove it so it cannot shadow this
+                # run's snapshots on a later resume.
+                _clear_checkpoints(sweep_dir)
+            # One shot either way: a snapshot can only belong to the first
+            # part a resumed run executes; anything else is stale.
+            pending_snap = None
+        hook = None
+        if sweep_checkpoint_every is not None:
+            every = max(1, int(sweep_checkpoint_every))
+            last_saved = {"c": None if init is None else np.asarray(init)}
+
+            def hook(it, coreness, _cursor=cursor, _threshold=threshold,
+                     _n=part_g.n_nodes, _start=start_sweep, _last=last_saved):
+                if it % every:
+                    return
+                c = np.asarray(coreness, dtype=np.int32)
+                if _last["c"] is not None and np.array_equal(_last["c"], c):
+                    return  # fixed point (or no progress): nothing to save
+                save_s = SweepSnapshot(
+                    coreness=c, parts_done=_cursor, sweep=_start + it,
+                    n_part=_n, threshold=_threshold,
+                    thresholds=state.thresholds, fingerprint=state.fingerprint,
+                ).save(sweep_dir)
+                _last["c"] = c
+                if on_sweep_saved is not None:
+                    on_sweep_saved(_cursor, _start + it, save_s)
+
         preprocess += (time.time() - t0) + extract_time
-        return decompose_fn(bg), bitmap_density(bg)
+        if init is not None or hook is not None:
+            res = decompose_fn(bg, init_coreness=init, on_sweep=hook)
+        else:
+            res = decompose_fn(bg)
+        return res, bitmap_density(bg), start_sweep
 
     def checkpoint_part(report: Optional[PartReport]):
-        """Save state at a part boundary, then fire the hook."""
+        """Save state at a part boundary, then fire the hook. Sweep
+        snapshots of the just-finished part are purged after the boundary
+        save (they are stale the moment the boundary exists; a crash
+        between save and purge is caught by snapshot validation)."""
         if checkpoint_dir is not None:
             save_s = state.save(checkpoint_dir)
+            _clear_checkpoints(sweep_dir)
             if report is not None:
                 report.save_time_s = save_s
         if on_part_done is not None and report is not None:
@@ -387,19 +619,25 @@ def dc_kcore(
 
     for ti in range(state.parts_done, len(thresholds)):
         t = thresholds[ti]
+        dstats = DivideStats(chunk_slots=_resolve_chunk_slots(divide_chunk))
         cand_mask, extract_time = timed_candidates(
-            remaining_graph, state.ext_remaining, t, strategy
+            remaining_graph, state.ext_remaining, t, strategy,
+            chunk_slots=divide_chunk, stats=dstats,
         )
         if not cand_mask.any():
             state.parts_done = ti + 1
             checkpoint_part(None)
             continue
         t_ext0 = time.time()
-        part_g, part_local_ids = induced_subgraph(remaining_graph, cand_mask)
+        part_g, part_local_ids = induced_subgraph(
+            remaining_graph, cand_mask, chunk_slots=divide_chunk, stats=dstats
+        )
         part_ext = state.ext_remaining[cand_mask]
         extract_time += time.time() - t_ext0
 
-        res, density = run_part(part_g, part_ext, f"core>={t}", t, extract_time)
+        res, density, start_sweep = run_part(
+            part_g, part_ext, f"core>={t}", t, extract_time, ti
+        )
 
         # Finalize nodes that resolved at >= t (all of them for Exact-Divide).
         final_local = res.coreness >= t
@@ -424,6 +662,7 @@ def dc_kcore(
             active_rows_per_iter=list(res.active_rows_per_iter),
             collective_bytes=res.collective_bytes,
             bitmap_density=density,
+            resumed_at_sweep=start_sweep,
         )
         parts.append(report)
 
@@ -432,20 +671,27 @@ def dc_kcore(
         newly_mask_local = np.zeros(remaining_graph.n_nodes, dtype=bool)
         newly_mask_local[part_local_ids[final_local]] = True
         keep_local = ~newly_mask_local
-        ext_delta = external_info(remaining_graph, keep_local, newly_mask_local)
-        new_graph, keep_ids = induced_subgraph(remaining_graph, keep_local)
+        ext_delta = external_info(
+            remaining_graph, keep_local, newly_mask_local,
+            chunk_slots=divide_chunk, stats=dstats,
+        )
+        new_graph, keep_ids = induced_subgraph(
+            remaining_graph, keep_local, chunk_slots=divide_chunk, stats=dstats
+        )
         state.ext_remaining = state.ext_remaining[keep_local] + ext_delta
         state.remaining_ids = state.remaining_ids[keep_ids]
         remaining_graph = new_graph
         preprocess += time.time() - t_ext0
+        report.divide_transient_bytes = dstats.peak_transient_bytes
 
         state.parts_done = ti + 1
         checkpoint_part(report)
 
     # Final (bottom) part: everything left.
     if remaining_graph.n_nodes > 0:
-        res, density = run_part(
-            remaining_graph, state.ext_remaining, "rest", None, 0.0
+        res, density, start_sweep = run_part(
+            remaining_graph, state.ext_remaining, "rest", None, 0.0,
+            len(thresholds),
         )
         state.coreness[state.remaining_ids] = res.coreness
         state.finalized[state.remaining_ids] = True
@@ -465,6 +711,7 @@ def dc_kcore(
             active_rows_per_iter=list(res.active_rows_per_iter),
             collective_bytes=res.collective_bytes,
             bitmap_density=density,
+            resumed_at_sweep=start_sweep,
         )
         parts.append(report)
         state.remaining_ids = np.zeros(0, dtype=np.int64)

@@ -210,7 +210,12 @@ def decompose(
     bucket every iteration. ``init_coreness`` resumes from a snapshot
     (fixed-point iterations are restartable from ANY valid upper bound of
     the true coreness — the fault-tolerance hook for the paper's 27.5h-scale
-    runs); ``on_sweep(iteration, coreness_view)`` is the snapshot callback.
+    runs); ``on_sweep(iteration, coreness)`` is the snapshot callback,
+    called after every sweep with an int32 original-id-order array view
+    (lazy device array — ``np.asarray`` it to materialize; no host sync is
+    forced on sweeps whose snapshot the hook discards) —
+    :func:`repro.core.dckcore.dc_kcore` feeds its sweep-granularity
+    checkpoints from it.
 
     If ``bg`` was built from a reordered graph (``bg.perm`` set), the
     reordering is invisible here: ``init_coreness`` is taken in original-id
@@ -243,6 +248,12 @@ def decompose(
     active = np.ones(n_buckets, dtype=bool)
 
     limit = max_iter if max_iter is not None else max(4, n)
+    # Hoisted once: re-uploading the O(n) permutation every sweep would put
+    # an H2D transfer in the hot loop just to build the on_sweep view.
+    inv_perm_dev = (
+        jnp.asarray(bg.inv_perm)
+        if on_sweep is not None and bg.inv_perm is not None else None
+    )
     comm_per_iter: List[int] = []
     active_rows_per_iter: List[int] = []
     total = 0
@@ -260,9 +271,14 @@ def decompose(
         total += changed
         it += 1
         if on_sweep is not None:
+            # Contract (shared with the distributed engine): int32 values
+            # in original-id order. The view stays a lazy device array —
+            # no host sync is forced here — so a hook that samples every
+            # k-th sweep (the sweep-granularity checkpoints of
+            # repro.core.dckcore) pays np.asarray only when it keeps one.
             view = c[:-1]
-            if bg.inv_perm is not None:
-                view = view[jnp.asarray(bg.inv_perm)]  # -> original-id order
+            if inv_perm_dev is not None:
+                view = view[inv_perm_dev]  # -> original-id order
             on_sweep(it, view)
         if changed == 0:
             break

@@ -334,9 +334,17 @@ def decompose_distributed(
     use_kernel: bool = False,
     frontier: bool = True,
     max_iter: Optional[int] = None,
+    init_coreness: Optional[np.ndarray] = None,
+    on_sweep=None,
 ) -> DecomposeResult:
     """Distributed fixed point; same contract as
-    :func:`repro.core.decompose.decompose` (including ``frontier``)."""
+    :func:`repro.core.decompose.decompose` (including ``frontier``,
+    ``init_coreness`` warm restart and the ``on_sweep(iteration, coreness)``
+    snapshot hook — both speak **original**-id order int32, the hook view
+    staying a lazy device array, so a snapshot taken by this engine
+    restarts the single-device one and vice versa; with an int16 wire,
+    snapshots widen to int32 on the way out and narrow back on the way
+    in)."""
     n = bg.n_nodes
     t0 = time.time()
     cand = max(1, hindex_of_sequence(bg.degrees.astype(np.int64) + bg.ext))
@@ -347,13 +355,15 @@ def decompose_distributed(
     ext_pad = jax.device_put(
         jnp.concatenate([ext, jnp.zeros((1,), jnp.int32)]), rep_sh
     )
+    if init_coreness is not None:
+        start = np.asarray(init_coreness)
+        if bg.perm is not None:
+            start = start[bg.perm]  # original-id order -> layout order
+        start = jnp.asarray(start, jnp.int32).astype(wire_dtype)
+    else:
+        start = (jnp.asarray(bg.degrees, jnp.int32) + ext).astype(wire_dtype)
     c = jax.device_put(
-        jnp.concatenate(
-            [
-                (jnp.asarray(bg.degrees, jnp.int32) + ext).astype(wire_dtype),
-                jnp.full((1,), -1, wire_dtype),
-            ]
-        ),
+        jnp.concatenate([start, jnp.full((1,), -1, wire_dtype)]),
         rep_sh,
     )
     node_tile = jax.device_put(jnp.asarray(node_tile_map(bg)), rep_sh)
@@ -378,6 +388,11 @@ def decompose_distributed(
 
     wire_bytes = jnp.dtype(wire_dtype).itemsize
     limit = max_iter if max_iter is not None else max(4, n)
+    # Hoisted once: no per-sweep H2D upload just to build the hook view.
+    inv_perm_dev = (
+        jnp.asarray(bg.inv_perm)
+        if on_sweep is not None and bg.inv_perm is not None else None
+    )
     comm_per_iter: List[int] = []
     active_rows_per_iter: List[int] = []
     collective_bytes_per_iter: List[int] = []
@@ -396,6 +411,14 @@ def decompose_distributed(
         comm_per_iter.append(changed)
         total += changed
         it += 1
+        if on_sweep is not None:
+            # Lazy int32 view in original-id order (same contract as the
+            # single-device engine): the hook materializes only the
+            # snapshots it keeps.
+            view = c[:-1].astype(jnp.int32)
+            if inv_perm_dev is not None:
+                view = view[inv_perm_dev]
+            on_sweep(it, view)
         if changed == 0:
             break
         if frontier:

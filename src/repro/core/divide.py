@@ -25,44 +25,118 @@ paper's "limited resources" knob.
 from __future__ import annotations
 
 import time
-from typing import List, Tuple, Union
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.graph.build import DivideStats, _resolve_chunk_slots, iter_row_ranges
 from repro.graph.structs import Graph
 
 
 def rough_candidates(deg: np.ndarray, ext: np.ndarray, t: int) -> np.ndarray:
-    """Rough-Divide candidate mask on the remaining graph."""
+    """Rough-Divide candidate mask on the remaining graph.
+
+    Pure ``O(n)`` arithmetic over the degree and ext arrays — no edge-sized
+    scratch; on the streaming ingest path it runs before (or without) the
+    CSR via :func:`rough_candidates_from_store`.
+    """
     return (deg.astype(np.int64) + ext.astype(np.int64)) >= t
 
 
-def exact_candidates(g: Graph, ext: np.ndarray, t: int) -> np.ndarray:
-    """Exact-Divide: generalized t-core mask via peeling with ext credit."""
-    alive = np.ones(g.n_nodes, dtype=bool)
+def rough_candidates_from_store(store, n_nodes: int, ext: np.ndarray, t: int) -> np.ndarray:
+    """Rough-Divide directly over a spilled :class:`~repro.graph.io.EdgeStore`.
+
+    Uses the store's duplicate-inclusive degree counts, so the mask is a
+    superset of :func:`rough_candidates` on the deduplicated CSR (equal when
+    the stream carries no duplicate edges) — still a valid Rough-Divide
+    candidate set (supersets only defer non-final nodes to the next part).
+    Together with :func:`~repro.graph.io.induced_subgraph_from_store` this
+    lets the first part of a streamed pipeline be planned *and* extracted
+    without the full CSR ever resident.
+    """
+    return rough_candidates(store.dup_degrees(int(n_nodes)), ext, t)
+
+
+def exact_candidates(
+    g: Graph,
+    ext: np.ndarray,
+    t: int,
+    chunk_slots: Optional[int] = None,
+    stats: Optional[DivideStats] = None,
+) -> np.ndarray:
+    """Exact-Divide: generalized t-core mask via peeling with ext credit.
+
+    Each peel round gathers only the *frontier* rows' adjacency, in chunks
+    of at most ``chunk_slots`` slots (``None`` =
+    :data:`~repro.graph.build.DEFAULT_DIVIDE_CHUNK_SLOTS`) — the transient
+    is bounded by the chunk budget plus ``O(n)`` state, where the previous
+    implementation pinned an edge-sized ``np.repeat`` source vector for the
+    whole peel. The peeled set is identical at every chunk size (each round
+    decrements alive neighbors of the full frontier, chunked or not).
+    """
+    n = g.n_nodes
+    budget = _resolve_chunk_slots(chunk_slots)
+    alive = np.ones(n, dtype=bool)
     deg = g.degrees.astype(np.int64) + ext.astype(np.int64)
-    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), g.degrees)
+    row_len = np.diff(g.indptr).astype(np.int64)
+    persistent = alive.nbytes + deg.nbytes + row_len.nbytes
     frontier = np.nonzero(alive & (deg < t))[0]
     while frontier.size:
         alive[frontier] = False
-        f = np.zeros(g.n_nodes, dtype=bool)
-        f[frontier] = True
-        hits = f[src] & alive[g.indices]
-        dec = np.bincount(g.indices[hits], minlength=g.n_nodes)
+        dec = np.zeros(n, dtype=np.int64)
+        lens = row_len[frontier]
+        round_live = 0
+        # cum is an indptr over the frontier rows, so the same row-range
+        # chunker that drives induced_subgraph/external_info groups them.
+        cum = np.concatenate([[0], np.cumsum(lens, dtype=np.int64)])
+        for start, stop in iter_row_ranges(cum, budget):
+            rows = frontier[start:stop]
+            group = lens[start:stop]
+            total = int(cum[stop] - cum[start])
+            if total == 0:
+                continue
+            # Vectorized multi-slice gather of the group's adjacency.
+            idx = (
+                np.arange(total, dtype=np.int64)
+                - np.repeat(cum[start:stop] - cum[start], group)
+                + np.repeat(g.indptr[rows], group)
+            )
+            cols = g.indices[idx]
+            live = alive[cols]
+            dec += np.bincount(cols[live], minlength=n)
+            round_live += int(live.sum())
+            if stats is not None:
+                stats.n_chunks += 1
+                stats.input_slots += total
+                stats.kept_slots += int(live.sum())
+                stats.bump(
+                    persistent + dec.nbytes + frontier.nbytes + lens.nbytes
+                    + idx.nbytes * 2 + cols.nbytes + live.nbytes
+                )
+        if stats is not None:
+            # Dense model of one peel round: the pinned np.repeat source
+            # vector plus three edge masks over ALL slots (regardless of
+            # frontier size) and the int32 compaction of this round's hits.
+            stats.note_pass(2 * g.n_edges, round_live, slot_bytes=11, kept_bytes=4)
         deg -= dec
         frontier = np.nonzero(alive & (deg < t) & (dec > 0))[0]
     return alive
 
 
 def timed_candidates(
-    g: Graph, ext: np.ndarray, t: int, strategy: str
+    g: Graph,
+    ext: np.ndarray,
+    t: int,
+    strategy: str,
+    chunk_slots: Optional[int] = None,
+    stats: Optional[DivideStats] = None,
 ) -> Tuple[np.ndarray, float]:
     """Candidate mask plus extraction wall time (paper Fig 9 measurement)."""
     t0 = time.time()
     if strategy == "rough":
         mask = rough_candidates(g.degrees, ext, t)
     elif strategy == "exact":
-        mask = exact_candidates(g, ext, t)
+        mask = exact_candidates(g, ext, t, chunk_slots=chunk_slots, stats=stats)
     else:
         raise ValueError(f"unknown divide strategy: {strategy}")
     return mask, time.time() - t0

@@ -3,9 +3,17 @@
 These are the host-side preprocessing steps of DC-kCore:
 
 * :func:`induced_subgraph` implements the divide step's subgraph extraction
-  (with old->new relabeling), for both Exact- and Rough-Divide.
+  (with old->new relabeling), for both Exact- and Rough-Divide. It runs as
+  **chunked passes over CSR row ranges**: per-chunk transient host bytes are
+  bounded by ``chunk_slots``, never by the edge count, and the output CSR is
+  bit-identical at every chunk size (row ranges preserve the parent CSR's
+  row-major, column-sorted emission order under the monotone relabeling).
 * :func:`external_info` implements Definition 3 of the paper:
-  ``E(v) = |N_G(v) ∩ V_upper|`` for every surviving node ``v``.
+  ``E(v) = |N_G(v) ∩ V_upper|`` for every surviving node ``v`` — same
+  chunked row-range structure.
+* :class:`DivideStats` tracks the divide step's peak transient host bytes
+  against the dense (``np.repeat``-over-all-rows) baseline, mirroring
+  :class:`~repro.graph.io.IngestStats` for the ingest step.
 * :func:`bucketize` converts a CSR part into the TPU-friendly
   degree-bucketed padded representation, splitting degree classes into
   row-tiles whose size is chosen by :func:`autotune_tile_caps` from the
@@ -19,7 +27,8 @@ These are the host-side preprocessing steps of DC-kCore:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+import dataclasses
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,6 +37,94 @@ from repro.graph.structs import Bucket, BucketedGraph, Graph
 # Bucket pad widths: powers of two. Smallest kept modest so tiny-degree nodes
 # don't blow up the padded footprint; largest grows to cover any max degree.
 _MIN_WIDTH = 8
+
+# Default chunk budget (in adjacency slots, i.e. directed edges) of the
+# chunked divide passes. One chunk's int64 temporaries are ~25 bytes/slot,
+# so the default bounds the divide transient at ~100 MiB regardless of
+# graph size; graphs smaller than this run in a single chunk, so the small
+# fixtures pay no chunking overhead at all.
+DEFAULT_DIVIDE_CHUNK_SLOTS = 1 << 22
+
+
+@dataclasses.dataclass
+class DivideStats:
+    """Transient-byte accounting of one chunked divide pass (or several —
+    :func:`~repro.core.dckcore.dc_kcore` threads one instance through all of
+    a part's extraction calls).
+
+    ``peak_transient_bytes`` tracks the live numpy temporaries of the
+    chunked passes — the per-chunk source/column/mask arrays plus the
+    persistent ``O(n)`` relabeling and count arrays — everything *except*
+    the output CSR, which any extraction must produce.
+    ``baseline_transient_bytes`` is what the dense (pre-chunking)
+    implementation would have peaked at for the same calls: each function
+    reports its own dense working-set model through :meth:`note_pass`
+    (e.g. ``np.repeat`` source + edge mask over all slots, compacted
+    pairs over kept slots), and the baseline is the **max** over the
+    noted passes — the dense code held one pass's transient at a time, so
+    summing would overstate the comparison. The regression gate is
+    ``peak_transient_bytes < baseline_transient_bytes`` with the peak
+    scaling with ``chunk_slots``, not the edge count.
+    """
+
+    chunk_slots: int
+    n_chunks: int = 0
+    input_slots: int = 0   # slots scanned across all chunked passes
+    kept_slots: int = 0    # slots surviving the masks across all passes
+    peak_transient_bytes: int = 0
+    baseline_transient_bytes: int = 0
+
+    def bump(self, live_bytes: int) -> None:
+        self.peak_transient_bytes = max(self.peak_transient_bytes, int(live_bytes))
+
+    def note_pass(self, slots: int, kept: int,
+                  slot_bytes: int = 9, kept_bytes: int = 20) -> None:
+        """Record one dense-equivalent pass: ``slot_bytes`` per scanned slot
+        (source vector + masks) plus ``kept_bytes`` per surviving slot
+        (compacted/relabeled copies); the caller supplies the constants of
+        its own dense model. The baseline keeps the max."""
+        self.baseline_transient_bytes = max(
+            self.baseline_transient_bytes,
+            int(slots) * int(slot_bytes) + int(kept) * int(kept_bytes),
+        )
+
+
+def _resolve_chunk_slots(chunk_slots: Optional[int]) -> int:
+    if chunk_slots is None:
+        return DEFAULT_DIVIDE_CHUNK_SLOTS
+    return max(1, int(chunk_slots))
+
+
+def iter_row_ranges(indptr: np.ndarray, chunk_slots: int) -> Iterator[Tuple[int, int]]:
+    """Yield CSR row ranges ``(lo, hi)`` holding at most ``chunk_slots``
+    adjacency slots each — the unit of every chunked divide pass.
+
+    A single row wider than the budget becomes its own over-budget range
+    (a CSR row is indivisible here, like a dedup bin in
+    :func:`~repro.graph.io._plan_bins`); every range holds at least one row
+    so the scan always terminates.
+    """
+    n = indptr.shape[0] - 1
+    chunk_slots = max(1, int(chunk_slots))
+    lo = 0
+    while lo < n:
+        hi = int(np.searchsorted(indptr, int(indptr[lo]) + chunk_slots, side="right")) - 1
+        hi = min(max(hi, lo + 1), n)
+        yield lo, hi
+        lo = hi
+
+
+def _iter_adjacency_chunks(g: Graph, chunk_slots: int):
+    """Yield ``(lo, hi, src, cols)`` per row range: the range's column slice
+    (a view into the CSR) and its row-aligned source vector — the shared
+    chunk body of every chunked divide pass."""
+    for lo, hi in iter_row_ranges(g.indptr, chunk_slots):
+        cols = g.indices[g.indptr[lo] : g.indptr[hi]]  # contiguous view
+        src = np.repeat(
+            np.arange(lo, hi, dtype=np.int64),
+            np.diff(g.indptr[lo : hi + 1]).astype(np.int64),
+        )
+        yield lo, hi, src, cols
 
 
 def _bucket_widths(max_deg: int) -> Sequence[int]:
@@ -98,48 +195,113 @@ def finalize_key_bin(
     return counts, (uniq % n_nodes).astype(np.int32)
 
 
-def induced_subgraph(g: Graph, keep_mask: np.ndarray) -> Tuple[Graph, np.ndarray]:
+def induced_subgraph(
+    g: Graph,
+    keep_mask: np.ndarray,
+    chunk_slots: Optional[int] = None,
+    stats: Optional[DivideStats] = None,
+) -> Tuple[Graph, np.ndarray]:
     """Induced subgraph on ``keep_mask`` with relabeled ids.
 
     Returns ``(subgraph, node_ids)`` where ``node_ids[new_id] = old_id``.
+
+    Runs as two chunked passes over CSR row ranges of at most ``chunk_slots``
+    adjacency slots (``None`` = :data:`DEFAULT_DIVIDE_CHUNK_SLOTS`): pass 1
+    counts surviving columns per kept row, pass 2 writes the relabeled
+    columns straight into the preallocated output ``indices`` array. Row
+    ranges are scanned in ascending order and relabeling is monotone, so the
+    output is **bit-identical at every chunk size** to a single dense pass —
+    and transient host bytes are bounded by the chunk budget plus ``O(n)``
+    id maps, never by the edge count. ``stats`` (a :class:`DivideStats`)
+    tracks the transient peak.
     """
     keep_mask = np.asarray(keep_mask, dtype=bool)
     if keep_mask.shape != (g.n_nodes,):
         raise ValueError("mask shape mismatch")
     node_ids = np.nonzero(keep_mask)[0].astype(np.int64)
-    new_id = np.full(g.n_nodes, -1, dtype=np.int64)
-    new_id[node_ids] = np.arange(node_ids.shape[0], dtype=np.int64)
-
-    deg = g.degrees
-    # Row lengths of surviving rows; then filter columns by mask.
-    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), deg)
-    keep_edge = keep_mask[src] & keep_mask[g.indices]
-    sub_src = new_id[src[keep_edge]]
-    sub_dst = new_id[g.indices[keep_edge]]
-
     n_sub = node_ids.shape[0]
-    counts = np.bincount(sub_src, minlength=n_sub)
+    new_id = np.full(g.n_nodes, -1, dtype=np.int64)
+    new_id[node_ids] = np.arange(n_sub, dtype=np.int64)
+    budget = _resolve_chunk_slots(chunk_slots)
+    persistent = keep_mask.nbytes + node_ids.nbytes + new_id.nbytes
+
+    # Pass 1: count surviving columns per kept row (chunk-bounded scratch).
+    counts = np.zeros(n_sub, dtype=np.int64)
+    for lo, hi, src, cols in _iter_adjacency_chunks(g, budget):
+        keep_edge = keep_mask[src] & keep_mask[cols]
+        cnt = np.bincount(src[keep_edge] - lo, minlength=hi - lo)
+        rows_kept = keep_mask[lo:hi]
+        counts[new_id[lo:hi][rows_kept]] = cnt[rows_kept]
+        if stats is not None:
+            stats.n_chunks += 1
+            stats.input_slots += int(src.size)
+            stats.kept_slots += int(keep_edge.sum())
+            stats.bump(
+                persistent + counts.nbytes
+                + src.nbytes + keep_edge.nbytes * 2 + cnt.nbytes
+            )
     indptr = np.zeros(n_sub + 1, dtype=np.int64)
     np.cumsum(counts, out=indptr[1:])
-    # Edges are emitted in (src-sorted, dst-sorted) order already because the
-    # parent CSR is sorted and relabeling is monotone.
-    sub = Graph(indptr=indptr, indices=sub_dst.astype(np.int32), n_nodes=int(n_sub))
+    if stats is not None:
+        # Dense model of the whole extraction: np.repeat source + edge mask
+        # over all slots, compacted int64 pairs + int32 cast over kept.
+        stats.note_pass(2 * g.n_edges, int(indptr[-1]), slot_bytes=9, kept_bytes=20)
+
+    # Pass 2: fill the output. Kept rows appear in ascending order across
+    # chunks, so each chunk's surviving columns land in one contiguous
+    # region of the output stream — a running cursor suffices.
+    sub_indices = np.empty(int(indptr[-1]), dtype=np.int32)
+    out_pos = 0
+    for lo, hi, src, cols in _iter_adjacency_chunks(g, budget):
+        keep_edge = keep_mask[src] & keep_mask[cols]
+        sub_dst = new_id[cols[keep_edge]]
+        sub_indices[out_pos : out_pos + sub_dst.size] = sub_dst
+        out_pos += int(sub_dst.size)
+        if stats is not None:
+            stats.bump(
+                persistent + counts.nbytes
+                + src.nbytes + keep_edge.nbytes * 2 + sub_dst.nbytes * 2
+            )
+    sub = Graph(indptr=indptr, indices=sub_indices, n_nodes=int(n_sub))
     return sub, node_ids
 
 
-def external_info(g: Graph, keep_mask: np.ndarray, upper_mask: np.ndarray) -> np.ndarray:
+def external_info(
+    g: Graph,
+    keep_mask: np.ndarray,
+    upper_mask: np.ndarray,
+    chunk_slots: Optional[int] = None,
+    stats: Optional[DivideStats] = None,
+) -> np.ndarray:
     """E(v) = number of neighbors of ``v`` inside ``upper_mask``.
 
     Returned per *surviving* node (``keep_mask`` order, relabeled ids).
     ``upper_mask`` marks nodes whose coreness is already finalized at a value
-    >= the part's threshold (Definition 3).
+    >= the part's threshold (Definition 3). One chunked pass over CSR row
+    ranges (``chunk_slots`` adjacency slots of transient, ``None`` =
+    :data:`DEFAULT_DIVIDE_CHUNK_SLOTS`); each range's counts land in a
+    disjoint slice of the per-node accumulator, so the result is exact at
+    every chunk size.
     """
     keep_mask = np.asarray(keep_mask, dtype=bool)
     upper_mask = np.asarray(upper_mask, dtype=bool)
-    deg = g.degrees
-    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), deg)
-    contributes = keep_mask[src] & upper_mask[g.indices]
-    ext_full = np.bincount(src[contributes], minlength=g.n_nodes)
+    ext_full = np.zeros(g.n_nodes, dtype=np.int64)
+    budget = _resolve_chunk_slots(chunk_slots)
+    persistent = keep_mask.nbytes + upper_mask.nbytes + ext_full.nbytes
+    contributed = 0
+    for lo, hi, src, cols in _iter_adjacency_chunks(g, budget):
+        contributes = keep_mask[src] & upper_mask[cols]
+        ext_full[lo:hi] = np.bincount(src[contributes] - lo, minlength=hi - lo)
+        if stats is not None:
+            stats.n_chunks += 1
+            stats.input_slots += int(src.size)
+            contributed += int(contributes.sum())
+            stats.bump(persistent + src.nbytes + contributes.nbytes * 2)
+    if stats is not None:
+        stats.kept_slots += contributed
+        # Dense model: np.repeat source + mask over all slots, compacted
+        # int64 source ids over contributing slots.
+        stats.note_pass(2 * g.n_edges, contributed, slot_bytes=9, kept_bytes=8)
     return ext_full[keep_mask].astype(np.int32)
 
 

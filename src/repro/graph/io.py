@@ -68,12 +68,13 @@ def load_edgelist(path: str, n_nodes: int | None = None) -> Graph:
     return Graph.from_edges(cat(src), cat(dst), n_nodes)
 
 
-def save_edgelist(path: str, g: Graph) -> None:
-    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), g.degrees)
-    mask = src < g.indices  # each undirected edge once
+def save_edgelist(path: str, g: Graph, chunk_edges: int = 1 << 20) -> None:
+    """Write each undirected edge once (``u < v``), in bounded chunks — no
+    edge-sized source vector is ever materialized."""
     with open(path, "w") as f:
-        for u, v in zip(src[mask], g.indices[mask]):
-            f.write(f"{u}\t{v}\n")
+        for src, dst in graph_edge_chunks(g, chunk_edges):
+            for u, v in zip(src, dst):
+                f.write(f"{u}\t{v}\n")
 
 
 # --------------------------------------------------------------------- #
@@ -246,6 +247,7 @@ def csr_from_edge_store(
     chunk_edges: int = DEFAULT_CHUNK_EDGES,
     max_bins: int = 256,
     stats: Optional[IngestStats] = None,
+    keep_mask: Optional[np.ndarray] = None,
 ) -> Tuple[Graph, IngestStats]:
     """Materialize the CSR from a spilled :class:`EdgeStore`.
 
@@ -254,6 +256,15 @@ def csr_from_edge_store(
     degree counts; (2) dedup each bin independently and stream its rows
     into the final ``indices`` file, read back once into the output array.
     Bit-identical to ``Graph.from_edges`` on the same input.
+
+    ``keep_mask`` (``[n_nodes]`` bool) restricts the build to the **induced
+    subgraph** on the kept nodes, relabeled ascending — the divide step's
+    extraction fused into the same two bounded passes: slots are filtered
+    and relabeled on the way into the bins, so the first part of a streamed
+    pipeline never materializes the full CSR. Relabeling is monotone and
+    ``np.unique``'s order is u-major/v-minor either way, so the result is
+    bit-identical to ``induced_subgraph(csr_from_edge_store(store), mask)``
+    at every chunk size.
     """
     if stats is None:
         stats = IngestStats(chunk_edges=int(chunk_edges))
@@ -268,6 +279,19 @@ def csr_from_edge_store(
     stats.slots_spilled = store.n_slots
 
     counts_dup = store.dup_degrees(n)
+    if keep_mask is not None:
+        keep_mask = np.asarray(keep_mask, dtype=bool)
+        if keep_mask.shape != (n,):
+            raise ValueError("mask shape mismatch")
+        new_id = np.full(n, -1, dtype=np.int64)
+        n_out = int(keep_mask.sum())
+        new_id[keep_mask] = np.arange(n_out, dtype=np.int64)
+        # Dup counts of kept rows (slots into dropped neighbors included —
+        # a conservative upper bound is all bin planning needs).
+        counts_dup = counts_dup[keep_mask]
+    else:
+        new_id = None
+        n_out = n
     budget_slots = max(1, 2 * int(chunk_edges))
     bounds = _plan_bins(counts_dup, budget_slots, max_bins)
     n_bins = int(bounds.size - 1)
@@ -277,16 +301,24 @@ def csr_from_edge_store(
     bin_dir = os.path.join(store.workdir, "bins")
     os.makedirs(bin_dir, exist_ok=True)
     try:
-        # Pass 1: route slots into per-bin key spills.
+        # Pass 1: route slots into per-bin key spills (mask-filtered and
+        # relabeled first on the induced path).
         bin_files = [
             open(os.path.join(bin_dir, f"bin_{i:05d}.i64"), "wb")
             for i in range(n_bins)
         ]
         try:
             for u, v in store.iter_slots(budget_slots):
-                key = u * np.int64(n) + v
+                raw_bytes = 0
+                if new_id is not None:
+                    kept = keep_mask[u] & keep_mask[v]
+                    # The unfiltered chunk (u, v, kept mask) is still live
+                    # while the filtered copies below exist — count it.
+                    raw_bytes = u.nbytes * 2 + kept.nbytes
+                    u, v = new_id[u[kept]], new_id[v[kept]]
+                key = u * np.int64(n_out) + v
                 if n_bins == 1:
-                    stats.bump(counts_dup.nbytes + u.nbytes * 3)  # u, v, key
+                    stats.bump(counts_dup.nbytes + raw_bytes + u.nbytes * 3)
                     key.tofile(bin_files[0])
                 else:
                     # Route via one stable sort + contiguous slices —
@@ -296,7 +328,7 @@ def csr_from_edge_store(
                     key_sorted = key[order]
                     run_counts = np.bincount(bi, minlength=n_bins)
                     offs = np.concatenate([[0], np.cumsum(run_counts)])
-                    stats.bump(counts_dup.nbytes + u.nbytes * 6)
+                    stats.bump(counts_dup.nbytes + raw_bytes + u.nbytes * 6)
                     for b in np.nonzero(run_counts)[0]:
                         key_sorted[offs[b] : offs[b + 1]].tofile(bin_files[b])
                 stats.spill_bytes += key.nbytes
@@ -307,29 +339,59 @@ def csr_from_edge_store(
 
         # Pass 2: dedup each bin in node order; rows concatenate into the
         # final indices stream.
-        counts = np.zeros(n, dtype=np.int64)
+        counts = np.zeros(n_out, dtype=np.int64)
         idx_path = os.path.join(bin_dir, "indices.i32")
         with open(idx_path, "wb") as idx_f:
             for i in range(n_bins):
                 keys = np.fromfile(os.path.join(bin_dir, f"bin_{i:05d}.i64"), dtype=np.int64)
                 lo, hi = int(bounds[i]), int(bounds[i + 1])
-                bin_counts, neigh = finalize_key_bin(keys, n, lo, hi)
+                bin_counts, neigh = finalize_key_bin(keys, n_out, lo, hi)
                 counts[lo:hi] = bin_counts
                 neigh.tofile(idx_f)
                 stats.bump(
                     counts_dup.nbytes + counts.nbytes
                     + keys.nbytes * 2 + bin_counts.nbytes + neigh.nbytes
                 )
-        indptr = np.zeros(n + 1, dtype=np.int64)
+        indptr = np.zeros(n_out + 1, dtype=np.int64)
         np.cumsum(counts, out=indptr[1:])
         indices = np.fromfile(idx_path, dtype=np.int32)
     finally:
         shutil.rmtree(bin_dir, ignore_errors=True)
 
-    g = Graph(indptr=indptr, indices=indices, n_nodes=n)
+    g = Graph(indptr=indptr, indices=indices, n_nodes=n_out)
     stats.output_bytes = g.memory_bytes()
     stats.bump(counts.nbytes + counts_dup.nbytes)
     return g, stats
+
+
+def induced_subgraph_from_store(
+    store: EdgeStore,
+    keep_mask: np.ndarray,
+    n_nodes: Optional[int] = None,
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+    max_bins: int = 256,
+    stats: Optional[IngestStats] = None,
+) -> Tuple[Graph, np.ndarray, IngestStats]:
+    """Divide-step extraction directly over the spill: the induced subgraph
+    on ``keep_mask``, built without the full CSR ever resident.
+
+    Returns ``(subgraph, node_ids, stats)`` with the same
+    ``node_ids[new_id] = old_id`` contract as
+    :func:`~repro.graph.build.induced_subgraph`, to which the result is
+    bit-identical (composed with :func:`csr_from_edge_store` on the same
+    store). With :func:`~repro.core.divide.rough_candidates_from_store`
+    supplying the mask from the store's duplicate-inclusive degrees, the
+    first (densest) part of a streamed DC-kCore run goes edge-list ->
+    part CSR under the chunk budget end to end.
+    """
+    if n_nodes is None:
+        n_nodes = store.max_id + 1
+    keep_mask = np.asarray(keep_mask, dtype=bool)
+    g, stats = csr_from_edge_store(
+        store, n_nodes, chunk_edges=chunk_edges, max_bins=max_bins,
+        stats=stats, keep_mask=keep_mask,
+    )
+    return g, np.nonzero(keep_mask)[0].astype(np.int64), stats
 
 
 def csr_from_edge_chunks(

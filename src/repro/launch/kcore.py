@@ -14,9 +14,15 @@ Graphs: ``rmat:<scale>:<edge_factor>``, ``ba:<n>:<m>``, ``er:<n>:<deg>``,
 graphs are read in N-edge chunks and built via the spill-to-disk external
 dedup (synthetic graphs are re-streamed through the same builder), and the
 CLI reports the tracked peak transient host bytes next to the in-memory
-loader's baseline. ``--checkpoint-dir`` saves the pipeline state after
-every part (atomic, ``.tmp``-then-rename); ``--resume`` re-enters a killed
-run at the first unfinished part. ``--reorder {identity,bfs,rcm}`` applies
+loader's baseline. ``--divide-chunk N`` sizes the chunked divide passes
+(adjacency slots of transient per extraction chunk; the divide step is
+always chunk-bounded — this only overrides the default budget), with each
+part's observed peak in the report table. ``--checkpoint-dir`` saves the
+pipeline state after every part (atomic, ``.tmp``-then-rename);
+``--sweep-checkpoint-every K`` additionally snapshots the conquer state
+every K sweeps, so ``--resume`` re-enters a killed run *mid-part* at the
+last completed sweep (falling back to the part boundary when no valid
+snapshot exists). ``--reorder {identity,bfs,rcm}`` applies
 a locality-aware node ordering to each part before tiling
 (``--reorder-sample N`` computes it from an N-slot edge sample);
 ``--max-bucket-rows`` overrides the tile autotuner with a uniform row cap
@@ -105,16 +111,26 @@ def main():
     ap.add_argument("--edge-chunk", type=int, default=None, metavar="EDGES",
                     help="stream ingest in chunks of this many edges "
                          "(bounded-transient spill-to-disk CSR build)")
+    ap.add_argument("--divide-chunk", type=int, default=None, metavar="SLOTS",
+                    help="chunk budget (adjacency slots) of the divide "
+                         "passes; default = the built-in bounded budget")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="save pipeline state here after every part")
+    ap.add_argument("--sweep-checkpoint-every", type=int, default=None,
+                    metavar="K",
+                    help="also snapshot the conquer state every K sweeps "
+                         "(mid-part resume; requires --checkpoint-dir)")
     ap.add_argument("--resume", action="store_true",
                     help="resume from --checkpoint-dir at the first "
-                         "unfinished part")
+                         "unfinished part (or mid-part, at the last "
+                         "completed sweep snapshot)")
     ap.add_argument("--check", action="store_true", help="verify vs BZ peeling")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.resume and args.checkpoint_dir is None:
         ap.error("--resume requires --checkpoint-dir")
+    if args.sweep_checkpoint_every is not None and args.checkpoint_dir is None:
+        ap.error("--sweep-checkpoint-every requires --checkpoint-dir")
 
     t0 = time.time()
     g, ingest = load_graph(args.graph, args.seed, edge_chunk=args.edge_chunk)
@@ -139,12 +155,18 @@ def main():
                             reorder_sample_edges=args.reorder_sample,
                             max_bucket_rows=args.max_bucket_rows,
                             checkpoint_dir=args.checkpoint_dir,
-                            resume=args.resume)
+                            resume=args.resume,
+                            divide_chunk=args.divide_chunk,
+                            sweep_checkpoint_every=args.sweep_checkpoint_every)
     print(f"\nDC-kCore done in {report.total_time_s:.2f}s "
           f"(preprocess {report.preprocess_time_s:.2f}s, reorder={args.reorder})")
     if report.resumed_parts:
         print(f"resumed: {report.resumed_parts} part(s) restored from "
               f"{args.checkpoint_dir}, not re-run")
+    mid = [p for p in report.parts if p.resumed_at_sweep]
+    for p in mid:
+        print(f"resumed mid-part: {p.name} warm-restarted at sweep "
+              f"{p.resumed_at_sweep} from a sweep snapshot")
     print(f"k_max = {int(core.max())}, total comm = {report.total_comm:,} updates, "
           f"peak part bytes = {report.peak_bytes/2**20:.1f} MiB")
     print(f"sweep work (frontier): {report.total_gathered_rows:,} gathered rows "
@@ -158,6 +180,7 @@ def main():
               f"iters={p.iterations:>3} comm={p.comm_amount:>10,} "
               f"work={p.gathered_rows:>10,}/{p.full_sweep_rows:<10,} "
               f"adj_density={p.bitmap_density:.3f} coll_bytes={p.collective_bytes:,} "
+              f"divide_peak={p.divide_transient_bytes/2**20:.2f}MiB "
               f"save_s={p.save_time_s:.3f} finalized={p.finalized:,}")
     if args.check:
         t0 = time.time()

@@ -12,6 +12,19 @@ forfeit parts 1..k-1. Pinned here:
   * A resumed-complete run returns the stored result without re-running.
   * The checkpoint holds host merge state only (no graph/tiles), and a
     thresholds mismatch or wrong graph is rejected.
+
+Sweep-granularity resume (mid-part, `sweep_checkpoint_every`):
+
+  * A **crash storm** on rmat14 kills the run at *every* sweep snapshot
+    save (`on_sweep_saved` raises unconditionally) and resumes each time:
+    every crash/resume cycle lands on a sweep boundary, mid-snapshot-save
+    `.tmp` junk is injected along the way, and the final coreness is
+    byte-identical to the uninterrupted run and oracle-exact, with every
+    multi-sweep part provably warm-restarted mid-part.
+  * A stale sweep snapshot — wrong cursor, wrong part size, wrong graph —
+    is ignored and resume falls back to the part-boundary checkpoint.
+  * rmat15 at budget-planned thresholds runs the same mid-sweep cycle in
+    the scheduled (slow) job.
 """
 import json
 import os
@@ -20,7 +33,13 @@ import numpy as np
 import pytest
 
 from repro.ckpt import latest_step
-from repro.core.dckcore import PipelineState, dc_kcore
+from repro.core.dckcore import (
+    PipelineState,
+    SweepSnapshot,
+    _sweep_dir,
+    dc_kcore,
+    graph_fingerprint,
+)
 from repro.graph.generators import rmat
 from repro.graph.oracle import peel_coreness
 
@@ -34,6 +53,21 @@ def kill_after(part_idx: int):
         if idx == part_idx:
             raise SimulatedCrash(f"killed after part {idx}")
     return hook
+
+
+def kill_every_sweep_save(cursor, sweep, save_s):
+    """on_sweep_saved hook: crash at every sweep boundary (after the
+    snapshot save completed — the worst surviving state)."""
+    raise SimulatedCrash(f"killed after sweep {sweep} of part {cursor}")
+
+
+def plant_tmp_junk(sweep_dir):
+    """What a kill mid-snapshot-save leaves: a half-written step dir."""
+    tmp = os.path.join(sweep_dir, "step_00009999.tmp")
+    os.makedirs(tmp, exist_ok=True)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        f.write("{ half written")
+    return tmp
 
 
 @pytest.fixture(scope="module")
@@ -178,6 +212,240 @@ def test_kill_at_every_part_boundary(tmp_path):
         np.testing.assert_array_equal(core, base)
         np.testing.assert_array_equal(core, oracle)
         assert rep.resumed_parts == k + 1
+
+
+# --------------------------------------------------------------------- #
+# Sweep-granularity (mid-part) resume
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def rmat14_sweep_storm(rmat14_runs, tmp_path_factory):
+    """Crash storm on the acceptance fixture: kill at EVERY sweep-snapshot
+    save, resume after each crash, until the run completes. Each cycle
+    advances at least one sweep (a snapshot is only written when the
+    estimates moved), so the storm terminates — and together the cycles
+    cover every sweep boundary of every part. Junk `.tmp` dirs are planted
+    mid-storm to model kills mid-snapshot-save."""
+    g = rmat14_runs["g"]
+    thresholds = rmat14_runs["thresholds"]
+    ck = str(tmp_path_factory.mktemp("rmat14_sweeps") / "ck")
+    cycles = 0
+    while True:
+        try:
+            core, rep = dc_kcore(
+                g, thresholds=thresholds, strategy="rough",
+                checkpoint_dir=ck, resume=cycles > 0,
+                sweep_checkpoint_every=1,
+                on_sweep_saved=kill_every_sweep_save,
+            )
+            break
+        except SimulatedCrash:
+            cycles += 1
+            if cycles in (2, 5):
+                plant_tmp_junk(_sweep_dir(ck))
+            assert cycles < 500, "crash storm does not terminate"
+    return dict(core=core, rep=rep, cycles=cycles, ck=ck)
+
+
+def test_sweep_storm_byte_identical_and_oracle_exact(rmat14_runs, rmat14_sweep_storm):
+    s = rmat14_sweep_storm
+    np.testing.assert_array_equal(s["core"], rmat14_runs["base_core"])
+    np.testing.assert_array_equal(s["core"], peel_coreness(rmat14_runs["g"]))
+    assert s["core"].dtype == rmat14_runs["base_core"].dtype
+
+
+def test_sweep_storm_covered_every_boundary(rmat14_runs, rmat14_sweep_storm):
+    """The storm crashed exactly once per productive sweep of the
+    uninterrupted run (a sweep snapshot is saved — and crashed on — iff the
+    sweep changed an estimate; the final no-change sweep of each part saves
+    nothing). So each part was warm-restarted all the way up to its last
+    productive sweep, and the cycle count equals the total count of
+    productive sweeps — every sweep boundary was a crash site."""
+    s = rmat14_sweep_storm
+    rep, base_rep = s["rep"], rmat14_runs["base_rep"]
+    assert [p.name for p in rep.parts] == [p.name for p in base_rep.parts]
+    multi = [(p, b) for p, b in zip(rep.parts, base_rep.parts) if b.iterations > 1]
+    assert multi, "fixture degenerated to single-sweep parts"
+    for p, b in multi:
+        # The final completing run re-entered this part at its last
+        # productive sweep and needed only the closing no-change sweep.
+        assert p.resumed_at_sweep == b.iterations - 1
+        assert p.iterations == 1
+    assert s["cycles"] == sum(
+        b.iterations - 1 for b in base_rep.parts if b.iterations > 1
+    )
+
+
+def test_sweep_storm_disk_stays_bounded(rmat14_sweep_storm):
+    """After completion: one pipeline step on disk, no sweep snapshots (all
+    purged at their part boundary), junk .tmp never restored from."""
+    ck = rmat14_sweep_storm["ck"]
+    steps = sorted(d for d in os.listdir(ck) if d.startswith("step_") and not d.endswith(".tmp"))
+    assert len(steps) == 1
+    sweeps = [d for d in os.listdir(_sweep_dir(ck)) if d.startswith("step_") and not d.endswith(".tmp")]
+    assert sweeps == []
+
+
+def test_midpart_crash_without_any_boundary_resumes(tmp_path):
+    """A run killed during part 0 leaves sweep snapshots but no pipeline
+    boundary at all; resume must still warm-restart mid-part."""
+    g = rmat(10, 8, seed=11)
+    thresholds = (16, 4)
+    base, _ = dc_kcore(g, thresholds=thresholds)
+    ck = str(tmp_path / "ck")
+    calls = []
+
+    def kill_at_second(cursor, sweep, save_s):
+        calls.append((cursor, sweep))
+        if len(calls) == 2:
+            raise SimulatedCrash
+
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                 sweep_checkpoint_every=1, on_sweep_saved=kill_at_second)
+    assert latest_step(ck) is None  # no part boundary exists
+    snap = SweepSnapshot.restore(_sweep_dir(ck))
+    assert snap is not None and snap.parts_done == 0
+    core, rep = dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                         resume=True, sweep_checkpoint_every=1)
+    np.testing.assert_array_equal(core, base)
+    np.testing.assert_array_equal(core, peel_coreness(g))
+    assert rep.parts[0].resumed_at_sweep == snap.sweep
+    assert rep.resumed_parts == 0
+
+
+def test_stale_sweep_snapshot_falls_back_to_part_boundary(tmp_path):
+    """Snapshots that fail validation — finished part's cursor, wrong part
+    size, wrong graph — are ignored; resume enters the next part from the
+    boundary checkpoint, and the result is still byte-identical."""
+    g = rmat(10, 8, seed=11)
+    thresholds = (16, 4)
+    base, base_rep = dc_kcore(g, thresholds=thresholds)
+    part0_n = base_rep.parts[0].n_nodes
+
+    def stale_cases(state_fp):
+        # (parts_done, n_part, threshold, fingerprint): each wrong one way.
+        yield dict(parts_done=0, n_part=part0_n, threshold=16, fp=state_fp)   # finished part
+        yield dict(parts_done=1, n_part=part0_n + 7, threshold=4, fp=state_fp)  # wrong size
+        bad_fp = dict(state_fp, deg_crc32=state_fp["deg_crc32"] ^ 1)
+        yield dict(parts_done=1, n_part=part0_n, threshold=4, fp=bad_fp)      # wrong graph
+
+    for i, case in enumerate(stale_cases(graph_fingerprint(g))):
+        ck = str(tmp_path / f"ck{i}")
+        with pytest.raises(SimulatedCrash):
+            dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                     on_part_done=kill_after(0), sweep_checkpoint_every=1)
+        SweepSnapshot(
+            coreness=np.zeros(case["n_part"], np.int32),
+            parts_done=case["parts_done"], sweep=5, n_part=case["n_part"],
+            threshold=case["threshold"],
+            thresholds=sorted(thresholds, reverse=True),
+            fingerprint=case["fp"],
+        ).save(_sweep_dir(ck))
+        core, rep = dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                             resume=True, sweep_checkpoint_every=1)
+        np.testing.assert_array_equal(core, base)
+        assert rep.resumed_parts == 1
+        # Fallback: no part was warm-restarted from the stale snapshot.
+        assert all(p.resumed_at_sweep == 0 for p in rep.parts)
+
+
+def test_stale_snapshot_cannot_shadow_new_saves(tmp_path):
+    """A crash can land between a part's boundary save and the sweeps
+    purge, leaving a stale snapshot on disk. Snapshot step numbering is
+    parts_done-major, so the next part's saves out-number it (the keep=1
+    GC must never prefer the stale one), and a later mid-part resume
+    warm-restarts from the NEW part's snapshot."""
+    g = rmat(10, 8, seed=11)
+    thresholds = (16, 4)
+    base, _ = dc_kcore(g, thresholds=thresholds)
+    ck = str(tmp_path / "ck")
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                 on_part_done=kill_after(0), sweep_checkpoint_every=1)
+    # The crash-between-save-and-purge artifact: part 0's last snapshot
+    # still on disk next to the part-1 boundary.
+    stale = SweepSnapshot(
+        coreness=np.zeros(7, np.int32), parts_done=0, sweep=9, n_part=7,
+        threshold=16, thresholds=sorted(thresholds, reverse=True),
+        fingerprint=graph_fingerprint(g),
+    )
+    stale.save(_sweep_dir(ck))
+    # Resume and crash again at part 1's second sweep snapshot.
+    calls = []
+
+    def kill_at_second(cursor, sweep, save_s):
+        calls.append((cursor, sweep))
+        if len(calls) == 2:
+            raise SimulatedCrash
+
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck, resume=True,
+                 sweep_checkpoint_every=1, on_sweep_saved=kill_at_second)
+    # Part 1's snapshot won the retention, not the stale part-0 one.
+    snap = SweepSnapshot.restore(_sweep_dir(ck))
+    assert snap is not None and snap.parts_done == 1
+    assert snap.sweep == calls[-1][1]
+    core, rep = dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                         resume=True, sweep_checkpoint_every=1)
+    np.testing.assert_array_equal(core, base)
+    assert rep.parts[1].resumed_at_sweep == snap.sweep
+
+
+def test_sweep_checkpoint_requires_checkpoint_dir(rmat14_runs):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        dc_kcore(rmat14_runs["g"], thresholds=(8,), sweep_checkpoint_every=1)
+
+
+def test_sweep_resume_without_flag_ignores_snapshots(tmp_path):
+    """Resuming WITHOUT sweep_checkpoint_every must not touch snapshots
+    (the decompose_fn contract only carries the warm-restart kwargs when
+    the feature is on) — still byte-identical via the part boundary."""
+    g = rmat(10, 8, seed=11)
+    thresholds = (16, 4)
+    base, _ = dc_kcore(g, thresholds=thresholds)
+    ck = str(tmp_path / "ck")
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                 on_part_done=kill_after(0), sweep_checkpoint_every=1)
+    core, rep = dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                         resume=True)
+    np.testing.assert_array_equal(core, base)
+    assert all(p.resumed_at_sweep == 0 for p in rep.parts)
+
+
+@pytest.mark.slow
+def test_sweep_storm_paper_shaped(tmp_path):
+    """Scheduled-only: the mid-sweep crash storm at rmat15 scale with
+    budget-planned thresholds (paper-shaped part counts)."""
+    from repro.core.divide import plan_thresholds
+
+    g = rmat(15, 16, seed=3)
+    thresholds = plan_thresholds(g, g.memory_bytes() // 3) or [24]
+    base, _ = dc_kcore(g, thresholds=thresholds, strategy="rough")
+    ck = str(tmp_path / "ck")
+    cycles = 0
+
+    def killer(cursor, sweep, save_s):
+        # Crash at the first snapshot save of the first four runs (four
+        # mid-part re-entries), then let the fifth run complete — bounded
+        # cost at this scale, same mid-sweep coverage shape as the rmat14
+        # storm.
+        if cycles < 4:
+            raise SimulatedCrash
+
+    while True:
+        try:
+            core, rep = dc_kcore(g, thresholds=thresholds, strategy="rough",
+                                 checkpoint_dir=ck, resume=cycles > 0,
+                                 sweep_checkpoint_every=2,
+                                 on_sweep_saved=killer)
+            break
+        except SimulatedCrash:
+            cycles += 1
+    np.testing.assert_array_equal(core, base)
+    np.testing.assert_array_equal(core, peel_coreness(g))
+    assert cycles == 4
+    assert any(p.resumed_at_sweep > 0 for p in rep.parts)
 
 
 @pytest.mark.slow

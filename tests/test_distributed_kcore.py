@@ -99,6 +99,42 @@ print("OK")
     assert "OK" in out
 
 
+def test_dckcore_distributed_midsweep_resume(tmp_path):
+    """Sweep-granularity checkpointing through the shard_map engine: the
+    on_sweep/init_coreness contract carries across decompose_fn, a run
+    killed at a sweep boundary resumes mid-part byte-identically."""
+    out = run_with_devices(
+        _COMMON
+        + rf"""
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+plan = MeshPlan(mesh=mesh, node_axes=("data",), slot_axes=("model",))
+g = rmat(10, 8, seed=11)
+fn = make_distributed_decompose(plan)
+base, _ = dc_kcore(g, thresholds=(4, 10), strategy="rough", decompose_fn=fn)
+ck = {str(tmp_path / 'ck')!r}
+class Crash(Exception): pass
+calls = []
+def killer(cursor, sweep, save_s):
+    calls.append((cursor, sweep))
+    if len(calls) == 2: raise Crash
+try:
+    dc_kcore(g, thresholds=(4, 10), strategy="rough", decompose_fn=fn,
+             checkpoint_dir=ck, sweep_checkpoint_every=1, on_sweep_saved=killer)
+    raise SystemExit("no crash")
+except Crash:
+    pass
+core, rep = dc_kcore(g, thresholds=(4, 10), strategy="rough", decompose_fn=fn,
+                     checkpoint_dir=ck, resume=True, sweep_checkpoint_every=1)
+np.testing.assert_array_equal(core, base)
+np.testing.assert_array_equal(core, peel_coreness(g))
+assert any(p.resumed_at_sweep > 0 for p in rep.parts), [p.resumed_at_sweep for p in rep.parts]
+print("OK")
+""",
+        n_devices=8,
+    )
+    assert "OK" in out
+
+
 def test_collective_bytes_accounting():
     out = run_with_devices(
         _COMMON

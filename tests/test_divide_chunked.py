@@ -1,0 +1,382 @@
+"""Chunked-divide equivalence and transient-bound tests.
+
+The divide step's extraction passes — `induced_subgraph`, `external_info`,
+`exact_candidates` — now run chunked over CSR row ranges. Pinned here:
+
+  * **bit-identity** with the dense (np.repeat-over-all-rows) reference at
+    every chunk size, including chunk=1 and chunk > total slots, on random
+    and heavy-tailed (rmat) graphs — hypothesis properties plus seeded
+    ports so the suite never silently skips;
+  * the **EdgeStore-direct** extraction (`induced_subgraph_from_store`,
+    `rough_candidates_from_store`) matches / soundly supersets the CSR
+    path, duplicates and self-loops included;
+  * the **transient peak** tracks the chunk budget, not the edge count,
+    and stays below the dense baseline (mirrors test_stream_ingest.py's
+    bound checks; bench fig15 is the larger-scale gate);
+  * `dc_kcore(divide_chunk=...)` is byte-identical to the default run.
+
+The dense references are deliberately re-implemented here (the pre-chunking
+code), so the production path is checked against an independent oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.core.dckcore import dc_kcore
+from repro.core.divide import (
+    exact_candidates,
+    rough_candidates,
+    rough_candidates_from_store,
+)
+from repro.graph.build import (
+    DivideStats,
+    external_info,
+    induced_subgraph,
+    iter_row_ranges,
+)
+from repro.graph.generators import rmat
+from repro.graph.io import EdgeStore, csr_from_edge_store, induced_subgraph_from_store
+from repro.graph.oracle import peel_coreness
+from repro.graph.structs import Graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # seeded ports below keep the invariants covered
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------- #
+# Dense references: the pre-chunking implementations, kept verbatim as
+# independent oracles.
+# --------------------------------------------------------------------- #
+def dense_induced_subgraph(g: Graph, keep_mask: np.ndarray):
+    keep_mask = np.asarray(keep_mask, dtype=bool)
+    node_ids = np.nonzero(keep_mask)[0].astype(np.int64)
+    new_id = np.full(g.n_nodes, -1, dtype=np.int64)
+    new_id[node_ids] = np.arange(node_ids.shape[0], dtype=np.int64)
+    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), g.degrees)
+    keep_edge = keep_mask[src] & keep_mask[g.indices]
+    sub_src = new_id[src[keep_edge]]
+    sub_dst = new_id[g.indices[keep_edge]]
+    n_sub = node_ids.shape[0]
+    counts = np.bincount(sub_src, minlength=n_sub)
+    indptr = np.zeros(n_sub + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    sub = Graph(indptr=indptr, indices=sub_dst.astype(np.int32), n_nodes=int(n_sub))
+    return sub, node_ids
+
+
+def dense_external_info(g: Graph, keep_mask, upper_mask):
+    keep_mask = np.asarray(keep_mask, dtype=bool)
+    upper_mask = np.asarray(upper_mask, dtype=bool)
+    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), g.degrees)
+    contributes = keep_mask[src] & upper_mask[g.indices]
+    ext_full = np.bincount(src[contributes], minlength=g.n_nodes)
+    return ext_full[keep_mask].astype(np.int32)
+
+
+def dense_exact_candidates(g: Graph, ext, t):
+    alive = np.ones(g.n_nodes, dtype=bool)
+    deg = g.degrees.astype(np.int64) + ext.astype(np.int64)
+    src = np.repeat(np.arange(g.n_nodes, dtype=np.int64), g.degrees)
+    frontier = np.nonzero(alive & (deg < t))[0]
+    while frontier.size:
+        alive[frontier] = False
+        f = np.zeros(g.n_nodes, dtype=bool)
+        f[frontier] = True
+        hits = f[src] & alive[g.indices]
+        dec = np.bincount(g.indices[hits], minlength=g.n_nodes)
+        deg -= dec
+        frontier = np.nonzero(alive & (deg < t) & (dec > 0))[0]
+    return alive
+
+
+def assert_same_graph(a: Graph, b: Graph):
+    assert a.n_nodes == b.n_nodes
+    np.testing.assert_array_equal(a.indptr, b.indptr)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    assert a.indptr.dtype == b.indptr.dtype
+    assert a.indices.dtype == b.indices.dtype
+
+
+def random_case(seed: int):
+    """(graph, keep_mask, upper_mask, ext, t) with loops/duplicates forced."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 48))
+    m = int(rng.integers(0, 5 * n))
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    if m >= 4:
+        src[0] = dst[0] = 0                  # self-loop
+        src[1], dst[1] = src[2], dst[2]      # duplicate edge
+    g = Graph.from_edges(src, dst, n_nodes=n)
+    keep = rng.random(n) < 0.6
+    upper = ~keep & (rng.random(n) < 0.7)
+    ext = rng.integers(0, 5, size=n).astype(np.int32)
+    t = int(rng.integers(1, 10))
+    return g, keep, upper, ext, t
+
+
+def check_all_equivalences(g, keep, upper, ext, t, chunk):
+    ref_sub, ref_ids = dense_induced_subgraph(g, keep)
+    sub, ids = induced_subgraph(g, keep, chunk_slots=chunk)
+    assert_same_graph(sub, ref_sub)
+    np.testing.assert_array_equal(ids, ref_ids)
+    assert ids.dtype == ref_ids.dtype
+
+    ref_ext = dense_external_info(g, keep, upper)
+    got_ext = external_info(g, keep, upper, chunk_slots=chunk)
+    np.testing.assert_array_equal(got_ext, ref_ext)
+    assert got_ext.dtype == ref_ext.dtype
+
+    np.testing.assert_array_equal(
+        exact_candidates(g, ext, t, chunk_slots=chunk),
+        dense_exact_candidates(g, ext, t),
+    )
+
+
+# --------------------------------------------------------------------- #
+# Seeded ports (always run, hypothesis or not)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("chunk", [1, 3, 257, 10**9, None])
+def test_chunked_divide_bit_identical_seeded(seed, chunk):
+    """chunk=1, tiny, medium, > total slots, and the default budget."""
+    g, keep, upper, ext, t = random_case(seed)
+    check_all_equivalences(g, keep, upper, ext, t, chunk)
+
+
+@pytest.mark.parametrize("chunk", [1, 129, 4096, 10**9])
+def test_chunked_divide_heavy_tailed(chunk):
+    """Power-law graph (hub rows much wider than the small chunk sizes —
+    chunk=1 forces every row into its own over-budget range)."""
+    g = rmat(9, 8, seed=7)
+    rng = np.random.default_rng(0)
+    keep = rng.random(g.n_nodes) < 0.5
+    upper = ~keep & (rng.random(g.n_nodes) < 0.5)
+    ext = rng.integers(0, 3, g.n_nodes).astype(np.int32)
+    check_all_equivalences(g, keep, upper, ext, 6, chunk)
+
+
+@pytest.mark.parametrize("chunk", [513, 8192, 10**9])
+def test_chunked_divide_rmat_fixture(rmat_graph, chunk):
+    rng = np.random.default_rng(1)
+    keep = rng.random(rmat_graph.n_nodes) < 0.6
+    upper = ~keep
+    ext = np.zeros(rmat_graph.n_nodes, np.int32)
+    check_all_equivalences(rmat_graph, keep, upper, ext, 8, chunk)
+
+
+def test_empty_and_degenerate_graphs():
+    for g in (Graph.empty(0), Graph.empty(7)):
+        mask = np.ones(g.n_nodes, dtype=bool)
+        for chunk in (1, None):
+            sub, ids = induced_subgraph(g, mask, chunk_slots=chunk)
+            assert_same_graph(sub, dense_induced_subgraph(g, mask)[0])
+            np.testing.assert_array_equal(
+                external_info(g, mask, ~mask, chunk_slots=chunk),
+                dense_external_info(g, mask, ~mask),
+            )
+
+
+def test_iter_row_ranges_partitions_rows(rmat_graph):
+    """Ranges partition the rows; every range fits the budget unless it is
+    a single over-budget row."""
+    indptr = rmat_graph.indptr
+    for budget in (1, 100, 10**9):
+        ranges = list(iter_row_ranges(indptr, budget))
+        assert ranges[0][0] == 0 and ranges[-1][1] == rmat_graph.n_nodes
+        for (lo, hi), (lo2, _hi2) in zip(ranges, ranges[1:]):
+            assert hi == lo2
+        for lo, hi in ranges:
+            slots = int(indptr[hi] - indptr[lo])
+            assert slots <= budget or hi == lo + 1
+
+
+# --------------------------------------------------------------------- #
+# EdgeStore-direct extraction
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("chunk", [1, 7, 10**6])
+def test_store_induced_matches_csr_path(seed, chunk):
+    """induced_subgraph_from_store == induced_subgraph(csr, mask), with
+    duplicates and self-loops in the stream, at every chunk size."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(2, 40))
+    m = int(rng.integers(0, 5 * n))
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    if m >= 4:
+        src[0] = dst[0] = 0
+        src[1], dst[1] = src[2], dst[2]
+    mask = rng.random(n) < 0.6
+    with EdgeStore() as store:
+        for i in range(0, m, chunk):
+            store.append(src[i : i + chunk], dst[i : i + chunk])
+        full, _ = csr_from_edge_store(store, n, chunk_edges=chunk)
+        ref_sub, ref_ids = induced_subgraph(full, mask)
+        got, ids, stats = induced_subgraph_from_store(store, mask, n, chunk_edges=chunk)
+        assert_same_graph(got, ref_sub)
+        np.testing.assert_array_equal(ids, ref_ids)
+        # Divide planning from the store: superset of the CSR-path mask.
+        ext = np.zeros(n, np.int32)
+        rough_store = rough_candidates_from_store(store, n, ext, 3)
+        rough_csr = rough_candidates(full.degrees, ext, 3)
+        assert (rough_store | ~rough_csr).all()  # csr mask -> store mask
+
+
+def test_store_rough_equals_csr_without_duplicates(rmat_graph):
+    """No duplicate edges in the stream => dup degrees are exact and the
+    store-side Rough-Divide equals the CSR one bit for bit."""
+    from repro.graph.io import graph_edge_chunks
+
+    n = rmat_graph.n_nodes
+    ext = np.zeros(n, np.int32)
+    with EdgeStore() as store:
+        for src, dst in graph_edge_chunks(rmat_graph, 4096):
+            store.append(src, dst)
+        for t in (2, 8, 32):
+            np.testing.assert_array_equal(
+                rough_candidates_from_store(store, n, ext, t),
+                rough_candidates(rmat_graph.degrees, ext, t),
+            )
+        # First-part extraction without the full CSR ever resident: equals
+        # the CSR-path part exactly (mask equality just proved).
+        mask = rough_candidates_from_store(store, n, ext, 8)
+        got, ids, _ = induced_subgraph_from_store(store, mask, n, chunk_edges=4096)
+        ref_sub, ref_ids = induced_subgraph(rmat_graph, mask)
+        assert_same_graph(got, ref_sub)
+        np.testing.assert_array_equal(ids, ref_ids)
+
+
+# --------------------------------------------------------------------- #
+# Transient bounds (mirrors test_stream_ingest's bound checks)
+# --------------------------------------------------------------------- #
+def test_divide_transient_bounded_by_chunk_not_edges(rmat_graph):
+    """Peak transient < dense baseline, and shrinking the chunk shrinks the
+    peak — the bound tracks the chunk budget, not the edge count."""
+    rng = np.random.default_rng(2)
+    keep = rng.random(rmat_graph.n_nodes) < 0.6
+    peaks = {}
+    for chunk in (1 << 10, 1 << 14):
+        st = DivideStats(chunk_slots=chunk)
+        induced_subgraph(rmat_graph, keep, chunk_slots=chunk, stats=st)
+        external_info(rmat_graph, keep, ~keep, chunk_slots=chunk, stats=st)
+        assert st.input_slots == 2 * 2 * rmat_graph.n_edges  # both passes
+        assert st.peak_transient_bytes < st.baseline_transient_bytes
+        peaks[chunk] = st.peak_transient_bytes
+    assert peaks[1 << 10] < peaks[1 << 14]
+
+
+def test_exact_candidates_transient_bounded(rmat_graph):
+    ext = np.zeros(rmat_graph.n_nodes, np.int32)
+    peaks = {}
+    for chunk in (1 << 9, 1 << 13):
+        st = DivideStats(chunk_slots=chunk)
+        exact_candidates(rmat_graph, ext, 8, chunk_slots=chunk, stats=st)
+        assert st.peak_transient_bytes < st.baseline_transient_bytes
+        peaks[chunk] = st.peak_transient_bytes
+    assert peaks[1 << 9] < peaks[1 << 13]
+
+
+# --------------------------------------------------------------------- #
+# Pipeline-level bit-identity of the divide_chunk knob
+# --------------------------------------------------------------------- #
+def test_dc_kcore_divide_chunk_byte_identical(rmat_graph):
+    base, base_rep = dc_kcore(rmat_graph, thresholds=(16, 8))
+    for chunk in (97, 1 << 12):
+        core, rep = dc_kcore(rmat_graph, thresholds=(16, 8), divide_chunk=chunk)
+        np.testing.assert_array_equal(core, base)
+        assert core.dtype == base.dtype
+        assert [p.name for p in rep.parts] == [p.name for p in base_rep.parts]
+        assert all(p.divide_transient_bytes > 0 for p in rep.parts
+                   if p.threshold is not None)
+    np.testing.assert_array_equal(base, peel_coreness(rmat_graph))
+
+
+def test_dc_kcore_exact_strategy_chunked(rmat_graph):
+    base, _ = dc_kcore(rmat_graph, thresholds=(12,), strategy="exact")
+    core, _ = dc_kcore(rmat_graph, thresholds=(12,), strategy="exact",
+                       divide_chunk=101)
+    np.testing.assert_array_equal(core, base)
+    np.testing.assert_array_equal(core, peel_coreness(rmat_graph))
+
+
+# --------------------------------------------------------------------- #
+# Hypothesis properties (seeded ports above keep coverage when absent)
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def graph_mask_chunk(draw):
+        n = draw(st.integers(min_value=1, max_value=36))
+        m = draw(st.integers(min_value=0, max_value=4 * n))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, n, size=m)
+        dst = rng.integers(0, n, size=m)
+        g = Graph.from_edges(src, dst, n_nodes=n)
+        keep = rng.random(n) < draw(st.floats(min_value=0.0, max_value=1.0))
+        upper = ~keep & (rng.random(n) < 0.5)
+        ext = rng.integers(0, 5, size=n).astype(np.int32)
+        t = draw(st.integers(min_value=1, max_value=10))
+        chunk = draw(
+            st.one_of(
+                st.integers(min_value=1, max_value=max(1, 2 * m + 1)),
+                st.just(10**9),
+                st.none(),
+            )
+        )
+        return g, keep, upper, ext, t, chunk
+
+    @st.composite
+    def heavy_tailed_case(draw):
+        scale = draw(st.integers(min_value=5, max_value=9))
+        ef = draw(st.integers(min_value=2, max_value=8))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        g = rmat(scale, ef, seed=seed)
+        rng = np.random.default_rng(seed)
+        keep = rng.random(g.n_nodes) < 0.6
+        upper = ~keep & (rng.random(g.n_nodes) < 0.5)
+        ext = rng.integers(0, 4, g.n_nodes).astype(np.int32)
+        t = draw(st.integers(min_value=1, max_value=12))
+        chunk = draw(st.one_of(
+            st.integers(min_value=1, max_value=4 * g.n_edges + 1), st.none()
+        ))
+        return g, keep, upper, ext, t, chunk
+
+    @given(data=graph_mask_chunk())
+    @settings(max_examples=80, deadline=None)
+    def test_chunked_divide_bit_identical_property(data):
+        g, keep, upper, ext, t, chunk = data
+        check_all_equivalences(g, keep, upper, ext, t, chunk)
+
+    @given(data=heavy_tailed_case())
+    @settings(max_examples=20, deadline=None)
+    def test_chunked_divide_heavy_tailed_property(data):
+        g, keep, upper, ext, t, chunk = data
+        check_all_equivalences(g, keep, upper, ext, t, chunk)
+
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        chunk=st.integers(min_value=1, max_value=64),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_store_induced_matches_csr_path_property(seed, chunk):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(2, 32))
+        m = int(rng.integers(0, 4 * n))
+        src = rng.integers(0, n, size=m)
+        dst = rng.integers(0, n, size=m)
+        mask = rng.random(n) < 0.6
+        with EdgeStore() as store:
+            for i in range(0, m, chunk):
+                store.append(src[i : i + chunk], dst[i : i + chunk])
+            full, _ = csr_from_edge_store(store, n, chunk_edges=chunk)
+            ref_sub, ref_ids = induced_subgraph(full, mask)
+            got, ids, _ = induced_subgraph_from_store(
+                store, mask, n, chunk_edges=chunk
+            )
+            assert_same_graph(got, ref_sub)
+            np.testing.assert_array_equal(ids, ref_ids)
