@@ -2,7 +2,10 @@
 
 One section per paper table/figure (bench_kcore), kernel microbenches
 (bench_kernels) and the dry-run roofline table (bench_dryrun).
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; the kcore section also writes
+its structured records to ``BENCH_kcore.json`` (uploaded as a CI
+artifact from the scheduled slow job, so the perf trajectory persists
+across PRs).
 """
 from __future__ import annotations
 

@@ -1,8 +1,15 @@
 from repro.ckpt.checkpoint import (
+    SAVE_THREAD_PREFIX,
     CheckpointManager,
     latest_step,
     restore_pytree,
     save_pytree,
 )
 
-__all__ = ["save_pytree", "restore_pytree", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save_pytree",
+    "restore_pytree",
+    "latest_step",
+    "CheckpointManager",
+    "SAVE_THREAD_PREFIX",
+]

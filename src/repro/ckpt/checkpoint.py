@@ -9,7 +9,21 @@ mid-run and restarts).
 Checkpoints store *global* host arrays, not device layouts, so restore can
 re-shard onto a different mesh (elastic scaling: the 8->4 device test).
 ``CheckpointManager`` adds async saves (a background thread overlaps
-serialization with compute) and retention.
+serialization with compute) and retention, with the ordering contract the
+overlapped DC-kCore pipeline leans on:
+
+* an async ``save`` snapshots the tree **by value** before returning, so
+  the caller may keep mutating its arrays while the write is in flight;
+* at most one save is ever in flight per manager (a new ``save`` first
+  waits out the previous one), and a worker failure is re-raised on the
+  next ``wait()``/``save`` instead of dying silently in the thread;
+* ``clear_steps`` (the purge path) waits out the pending save before
+  removing anything — write-then-rename ordering means a save enqueued
+  before a purge is either fully on disk (and then removed) or was never
+  started; a purge can never shred a ``.tmp`` a writer is still filling;
+* the completed save's own wall time is surfaced (``last_save_seconds`` /
+  the ``on_done`` callback), distinct from the time the *caller* was
+  blocked, which ``save`` returns — async callers report both.
 """
 from __future__ import annotations
 
@@ -18,11 +32,16 @@ import os
 import re
 import shutil
 import threading
-from typing import Optional
+import time
+from typing import Callable, Optional
 
 import jax
 import ml_dtypes
 import numpy as np
+
+# Worker threads of in-flight async saves carry this name prefix; the test
+# suite asserts none outlive a test (a leaked thread = a missing wait()).
+SAVE_THREAD_PREFIX = "ckpt-save"
 
 
 def _dtype_from_name(name: str) -> np.dtype:
@@ -116,32 +135,90 @@ def restore_pytree(path: str, like, step: Optional[int] = None, shardings=None):
 
 
 class CheckpointManager:
-    """Async saves + retention."""
+    """Async saves + retention (one save in flight at a time)."""
 
     def __init__(self, path: str, keep: int = 3):
         self.path = path
         self.keep = keep
         self._pending: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        # Wall seconds of the last COMPLETED save (write + rename + GC) —
+        # the honest cost of persisting, as opposed to the time save()'s
+        # caller was blocked, which is near zero on the async path.
+        self.last_save_seconds: float = 0.0
         os.makedirs(path, exist_ok=True)
 
-    def save(self, tree, step: int, extra: Optional[dict] = None, blocking: bool = False):
+    def save(
+        self,
+        tree,
+        step: int,
+        extra: Optional[dict] = None,
+        blocking: bool = False,
+        on_done: Optional[Callable[[int, float], None]] = None,
+    ) -> float:
+        """Save ``tree`` at ``step``; returns seconds the caller was blocked.
+
+        Blocking: the return value is the full save duration. Async: it
+        covers only waiting out a previous pending save plus the host-side
+        value snapshot of the tree (the caller may mutate its arrays the
+        moment this returns — the write works from the copy); the completed
+        write's own duration lands in ``last_save_seconds`` and is passed to
+        ``on_done(step, seconds)``, called from the worker thread after the
+        atomic rename and retention GC. ``on_done`` must not raise.
+        """
+        t_blocked = time.time()
         self.wait()
-        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+        if blocking:
+            host_tree = jax.tree.map(np.asarray, tree)
+        else:
+            host_tree = jax.tree.map(lambda x: np.array(x, copy=True), tree)
 
         def work():
-            save_pytree(self.path, host_tree, step, extra)
-            self._gc()
+            t0 = time.time()
+            try:
+                save_pytree(self.path, host_tree, step, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on the next wait()
+                self._error = e
+                return
+            self.last_save_seconds = time.time() - t0
+            if on_done is not None:
+                on_done(step, self.last_save_seconds)
 
         if blocking:
             work()
+            self.wait()  # re-raise a failure immediately on the blocking path
         else:
-            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending = threading.Thread(
+                target=work, daemon=True,
+                name=f"{SAVE_THREAD_PREFIX}:{os.path.basename(self.path)}:{step}",
+            )
             self._pending.start()
+        return time.time() - t_blocked
 
     def wait(self):
+        """Join the in-flight save, re-raising any failure it hit."""
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def clear_steps(self):
+        """Remove every step dir (and half-written ``.tmp``) under ``path``.
+
+        Waits out the pending async save first: write-then-rename ordering
+        means a save enqueued before this purge is fully on disk — and then
+        removed — never torn, and the purge can never rmtree a ``.tmp`` the
+        worker is still filling (which would kill the save mid-write).
+        """
+        self.wait()
+        if not os.path.isdir(self.path):
+            return
+        for d in os.listdir(self.path):
+            if re.fullmatch(r"step_\d+(\.tmp)?", d):
+                shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)
 
     def _gc(self):
         steps = sorted(

@@ -1,4 +1,4 @@
-"""DC-kCore orchestrator — divide, conquer (sequentially), merge, resume.
+"""DC-kCore orchestrator — a staged divide / conquer / checkpoint pipeline.
 
 Implements the full pipeline of paper Section 4 for an arbitrary number of
 parts (Section 5.6 evaluates 2-4):
@@ -13,19 +13,40 @@ parts (Section 5.6 evaluates 2-4):
   3. Decompose the final remaining part and finalize everything.
   4. Merge: scatter part coreness back through the id maps.
 
-Parts are processed **sequentially**, so the peak device footprint is the
-max over parts instead of the whole graph — the paper's resource story. Per
-part we record nodes/edges/iterations/communication/peak bytes/extract and
-decompose times, plus the frontier work metric (rows gathered per sweep vs
-the always-full-sweep baseline); these power every benchmark table
-(Figs 7-11, Table 3) and the work-per-iteration columns.
+Parts still *conquer* one at a time, so the peak device footprint is the
+max over parts instead of the whole graph — the paper's resource story.
+But the loop is organized as three explicit stages per part:
+
+* **divide/prefetch** — candidate selection + the chunked
+  ``induced_subgraph`` / ``external_info`` passes plus the part's
+  reorder+bucketize. Pure-numpy host work; with ``overlap=True`` a single
+  worker thread runs the *next* part's divide (and the shrink of the
+  current remaining graph) while the current part sweeps on the device.
+* **conquer** — device sweeps through the pluggable engine, with
+  sweep-granularity snapshots via the engine's ``on_sweep`` hook.
+* **checkpoint** — the part-boundary state save and the sweep snapshots,
+  routed through one persistent :class:`~repro.ckpt.CheckpointManager`
+  per directory. With ``overlap=True`` these saves are async (the write
+  happens on the manager's thread while the next part sweeps); purges go
+  through ``CheckpointManager.clear_steps`` which waits out any pending
+  save, so a purge can never race an in-flight write.
+
+**Prefetch is speculative — correctness first.** The worker assumes every
+candidate of the conquering part finalizes (exact by construction for
+Exact-Divide, a bet for Rough-Divide). After the conquer the prediction is
+checked against the actual finalized set: on a hit the prefetched shrink
+and next-part plan are adopted (byte-identical to the sequential fold,
+because every divide pass is deterministic and the masks coincide); on a
+miss everything speculative is discarded and recomputed synchronously,
+exactly as the sequential path would. ``overlap=True`` therefore changes
+wall-clock only — coreness is byte-identical to ``overlap=False``.
 
 **Per-part checkpointing.** The paper's headline stability claim (136B
 edges, 27.5h runs) only holds if a failed part does not forfeit the parts
 already decomposed. The loop state between parts is an explicit
 :class:`PipelineState`; with ``checkpoint_dir`` set it is saved atomically
-through :func:`repro.ckpt.save_pytree` after every part, and
-``resume=True`` re-enters at the first unfinished part:
+after every part, and ``resume=True`` re-enters at the first unfinished
+part:
 
 * the checkpoint holds the *host merge state* — coreness, the finalized
   mask, ``ext`` of the remaining nodes, the remaining-id map, the
@@ -37,6 +58,11 @@ through :func:`repro.ckpt.save_pytree` after every part, and
 * a killed run leaves at most a ``step_*.tmp`` directory, which restore
   ignores — resume always starts from the last *complete* part boundary
   and reproduces byte-identical coreness (every stage is deterministic).
+  An *async* save that was still in flight at the crash either fully
+  landed (write-then-rename) or is ignored as ``.tmp`` — same guarantee.
+  When the crash is an exception (the fault-injection tests), the
+  pipeline drains pending saves and joins its prefetch worker before
+  re-raising, so the on-disk state at "crash" time is deterministic.
 
 **Sweep-granularity checkpointing.** A part boundary is a coarse resume
 unit — a part at paper scale sweeps for hours. ``sweep_checkpoint_every=k``
@@ -54,10 +80,14 @@ boundary save, so disk stays bounded at one state + one snapshot.
 (``divide_chunk`` adjacency slots, default
 :data:`~repro.graph.build.DEFAULT_DIVIDE_CHUNK_SLOTS`), so the host
 transient of the divide step is bounded by the chunk budget — never by
-the edge count — and each part reports its observed peak.
+the edge count — and each part reports its observed peak. The prefetch
+worker uses its own :class:`~repro.graph.build.DivideStats` instance
+(folded into the part's via :meth:`DivideStats.merge`), so the worker and
+the main thread share no mutable state.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import os
 import re
@@ -83,6 +113,19 @@ from repro.graph.structs import BucketedGraph, Graph
 STATE_FORMAT = 1
 SWEEP_FORMAT = 1
 
+# The prefetch worker thread carries this name prefix; the test suite
+# asserts none outlive a test (a leaked thread = a missing close()).
+PREFETCH_THREAD_PREFIX = "dckcore-prefetch"
+
+
+class MergeIncompleteError(RuntimeError):
+    """The final merge left nodes without a coreness value.
+
+    This is the pipeline's last correctness gate (every node must be
+    finalized by exactly one part); a bare ``assert`` here would vanish
+    under ``python -O`` and let a broken merge return garbage silently.
+    """
+
 
 def graph_fingerprint(g: Graph) -> Dict[str, int]:
     """Cheap identity of a graph for checkpoint/resume validation: node and
@@ -100,7 +143,8 @@ def graph_fingerprint(g: Graph) -> Dict[str, int]:
 def _clear_checkpoints(path: str) -> None:
     """Remove every step dir (and half-written .tmp) under ``path`` — a
     fresh run must not leave stale higher-numbered steps from a previous
-    run for a later ``resume=True`` to pick up."""
+    run for a later ``resume=True`` to pick up. Only safe when no async
+    save targets ``path``; live managers purge via ``clear_steps``."""
     if not os.path.isdir(path):
         return
     for d in os.listdir(path):
@@ -132,8 +176,15 @@ class PartReport:
     # the static frontier filter could NOT rule out a tile (lower = sparser
     # = locality-aware reordering worked).
     bitmap_density: float = 1.0
-    # Wall time of the atomic per-part checkpoint save (0 when disabled).
+    # Seconds the pipeline was BLOCKED on this part's boundary save (the
+    # full save on the blocking path; wait-out-previous + host snapshot on
+    # the async path). 0 when checkpointing is disabled.
     save_time_s: float = 0.0
+    # Wall seconds of the COMPLETED boundary save (write + rename + GC),
+    # stamped by the checkpoint manager when the write lands — on the
+    # async path this is the honest persistence cost, most of it hidden
+    # behind the next part's sweeps.
+    save_wall_s: float = 0.0
     # Peak transient host bytes of the part's divide passes (candidate
     # extraction + induced subgraph + ext fold + shrink), bounded by the
     # chunk budget — see repro.graph.build.DivideStats.
@@ -141,6 +192,9 @@ class PartReport:
     # Sweep number the part's conquer was warm-restarted at from a
     # sweep-granularity snapshot (0 = started from scratch).
     resumed_at_sweep: int = 0
+    # True when this part's divide ran speculatively on the prefetch
+    # worker (and the speculation was adopted).
+    prefetched: bool = False
 
 
 @dataclasses.dataclass
@@ -149,6 +203,9 @@ class DCKCoreReport:
     total_time_s: float
     preprocess_time_s: float
     resumed_parts: int = 0  # parts restored from checkpoint, not re-run
+    overlap: bool = False   # divide/checkpoint overlapped with conquer?
+    prefetch_hits: int = 0    # speculative shrinks adopted
+    prefetch_misses: int = 0  # speculative shrinks discarded + recomputed
 
     @property
     def total_comm(self) -> int:
@@ -179,8 +236,29 @@ class DCKCoreReport:
 
     @property
     def total_save_time_s(self) -> float:
-        """Wall time spent in per-part checkpoint saves."""
+        """Wall time the pipeline was BLOCKED on per-part checkpoint saves
+        (the full save cost when saves are blocking; near zero when async)."""
         return sum(p.save_time_s for p in self.parts)
+
+    @property
+    def total_save_wall_s(self) -> float:
+        """Wall time of the COMPLETED per-part saves — the honest cost of
+        persisting, whether or not the pipeline waited for it."""
+        return sum(p.save_wall_s for p in self.parts)
+
+    @property
+    def total_decompose_time_s(self) -> float:
+        """Wall time the conquer engine was actually sweeping."""
+        return sum(p.decompose_time_s for p in self.parts)
+
+    @property
+    def idle_fraction(self) -> float:
+        """Fraction of the run's wall clock the accelerator spent NOT
+        sweeping (divide passes, bucketize, checkpoint saves, merge) — the
+        stall metric ``overlap=True`` exists to shrink."""
+        if self.total_time_s <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self.total_decompose_time_s / self.total_time_s)
 
 
 @dataclasses.dataclass
@@ -235,28 +313,47 @@ class PipelineState:
             "reports": [dataclasses.asdict(p) for p in self.reports],
         }
 
-    def save(self, checkpoint_dir: str) -> float:
-        """Atomic save at the current part boundary; returns wall seconds.
+    def save(
+        self,
+        checkpoint_dir: str,
+        manager=None,
+        blocking: bool = True,
+        on_done: Optional[Callable[[int, float], None]] = None,
+    ) -> float:
+        """Atomic save at the current part boundary; returns the wall
+        seconds the caller was blocked (the full save when ``blocking``,
+        wait-out-previous + host snapshot when async).
 
         Step number = parts completed so far (the rest part counts one
         past the last threshold), so ``latest_step`` is the cursor. A
-        part's own ``save_time_s`` is only known after its save returns,
-        so it is persisted one boundary later (the next save serializes
-        the updated report); the final part's save cost exists only in the
-        live report.
+        part's own save timings are only known after (or, async, *while*)
+        its save runs, so they are persisted one boundary later (the next
+        save serializes the updated report); the final part's save cost
+        exists only in the live report.
 
-        Restore only ever reads the latest step, so retention is
-        ``CheckpointManager(keep=1)``: earlier steps are pruned *after* the
+        ``manager`` lets the pipeline reuse one persistent
+        :class:`~repro.ckpt.CheckpointManager` (required for async saves —
+        something must stay alive to be waited on); without it a throwaway
+        blocking manager is used. The previous in-flight save is waited
+        out *before* ``extra()`` serializes the reports, so a pending
+        ``on_done`` stamping the previous report's completed-save time
+        always lands first. Restore only ever reads the latest step, so
+        retention is ``keep=1``: earlier steps are pruned *after* the
         atomic rename — disk stays bounded at one checkpoint (the state
         arrays are O(n); at paper scale a P-part run must not hold P of
         them). A crash between rename and prune leaves two steps; resume
         still picks the newest."""
         from repro.ckpt import CheckpointManager
 
+        if manager is None:
+            manager = CheckpointManager(checkpoint_dir, keep=1)
+            blocking = True
         t0 = time.time()
+        manager.wait()
         step = self.parts_done + (1 if self.complete else 0)
-        CheckpointManager(checkpoint_dir, keep=1).save(
-            self.arrays(), step, extra=self.extra(), blocking=True
+        manager.save(
+            self.arrays(), step, extra=self.extra(),
+            blocking=blocking, on_done=on_done,
         )
         return time.time() - t0
 
@@ -349,9 +446,24 @@ class SweepSnapshot:
     def step(self) -> int:
         return self.parts_done * SweepSnapshot._PART_STRIDE + self.sweep
 
-    def save(self, sweep_dir: str) -> float:
+    def save(
+        self,
+        sweep_dir: str,
+        manager=None,
+        blocking: bool = True,
+        on_done: Optional[Callable[[int, float], None]] = None,
+    ) -> float:
+        """Save the snapshot; returns seconds the caller was blocked.
+
+        ``manager`` reuses a persistent :class:`CheckpointManager` (the
+        overlapped pipeline's async path — the save runs on the manager's
+        thread while the part keeps sweeping); without it a throwaway
+        blocking manager is used."""
         from repro.ckpt import CheckpointManager
 
+        if manager is None:
+            manager = CheckpointManager(sweep_dir, keep=1)
+            blocking = True
         t0 = time.time()
         extra = {
             "format": SWEEP_FORMAT,
@@ -362,9 +474,9 @@ class SweepSnapshot:
             "thresholds": [int(t) for t in self.thresholds],
             "fingerprint": dict(self.fingerprint),
         }
-        CheckpointManager(sweep_dir, keep=1).save(
+        manager.save(
             {"part_coreness": np.asarray(self.coreness, dtype=np.int32)},
-            self.step, extra=extra, blocking=True,
+            self.step, extra=extra, blocking=blocking, on_done=on_done,
         )
         return time.time() - t0
 
@@ -418,6 +530,479 @@ PartHook = Callable[[int, PartReport], None]
 SweepSavedHook = Callable[[int, int, float], None]
 
 
+@dataclasses.dataclass
+class PartPlan:
+    """Divide-stage output: everything the conquer stage needs for one part.
+
+    ``threshold is None`` marks the final "rest" part (everything left,
+    no candidate mask). ``part_g is None`` marks an *empty* threshold part
+    (no candidates at this threshold — the cursor advances, nothing runs).
+    ``speculative`` records that the plan was built by the prefetch worker
+    on the *predicted* remaining graph; it is only ever executed after the
+    prediction was validated.
+    """
+
+    cursor: int
+    name: str
+    threshold: Optional[int]
+    part_g: Optional[Graph]
+    part_local_ids: Optional[np.ndarray]
+    part_ext: Optional[np.ndarray]
+    cand_mask: Optional[np.ndarray]
+    dstats: DivideStats
+    extract_time_s: float
+    bg: Optional[BucketedGraph] = None
+    bucketize_time_s: float = 0.0
+    speculative: bool = False
+
+    @property
+    def is_rest(self) -> bool:
+        return self.threshold is None
+
+    @property
+    def is_empty(self) -> bool:
+        return self.part_g is None
+
+
+@dataclasses.dataclass
+class _Prefetch:
+    """Prefetch-worker output: the speculative shrink of the remaining
+    graph (assuming every candidate of part ``base_cursor`` finalizes)
+    plus, when there is one, the next part's plan built on that shrink."""
+
+    base_cursor: int
+    shrink_graph: Graph
+    shrink_keep_ids: np.ndarray   # remaining-local ids kept by the shrink
+    ext_next: np.ndarray          # ext of the kept nodes after the fold
+    shrink_stats: DivideStats
+    shrink_time_s: float
+    plan: Optional[PartPlan] = None
+
+
+class _PartPipeline:
+    """The staged scheduler behind :func:`dc_kcore`.
+
+    One instance per run. The main thread owns ``state`` and the conquer
+    stage; the (optional, single) prefetch worker only ever READS the
+    graph/ext snapshots passed to it at submit time — the main thread
+    rebinds ``state.ext_remaining`` / ``state.remaining_ids`` /
+    ``self.remaining_graph`` to fresh arrays instead of mutating them, so
+    a worker holding the old references is always safe. Checkpoint I/O
+    lives on the two persistent managers; ``close()`` drains both and
+    joins the worker on every exit path (success or crash), which is what
+    makes the fault-injection tests deterministic.
+    """
+
+    def __init__(
+        self, *,
+        state: PipelineState,
+        remaining_graph: Graph,
+        thresholds: List[int],
+        strategy: str,
+        decompose_fn: DecomposeFn,
+        row_align: int,
+        reorder: str,
+        max_bucket_rows,
+        reorder_sample_edges: Optional[int],
+        checkpoint_dir: Optional[str],
+        sweep_dir: Optional[str],
+        divide_chunk: Optional[int],
+        sweep_checkpoint_every: Optional[int],
+        on_part_done: Optional[PartHook],
+        on_sweep_saved: Optional[SweepSavedHook],
+        overlap: bool,
+        pending_snap: Optional[SweepSnapshot],
+        state_mgr=None,
+        sweeps_mgr=None,
+    ):
+        self.state = state
+        self.remaining_graph = remaining_graph
+        self.thresholds = thresholds
+        self.strategy = strategy
+        self.decompose_fn = decompose_fn
+        self.row_align = row_align
+        self.reorder = reorder
+        self.max_bucket_rows = max_bucket_rows
+        self.reorder_sample_edges = reorder_sample_edges
+        self.checkpoint_dir = checkpoint_dir
+        self.sweep_dir = sweep_dir
+        self.divide_chunk = divide_chunk
+        self.sweep_checkpoint_every = sweep_checkpoint_every
+        self.on_part_done = on_part_done
+        self.on_sweep_saved = on_sweep_saved
+        self.overlap = overlap
+        self.pending_snap = pending_snap
+        self.state_mgr = state_mgr
+        self.sweeps_mgr = sweeps_mgr
+
+        self.parts: List[PartReport] = state.reports
+        self.preprocess_time_s = 0.0
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self._future: Optional[concurrent.futures.Future] = None
+        self._executor: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        if overlap:
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix=PREFETCH_THREAD_PREFIX
+            )
+
+    # ---------------- divide stage ---------------- #
+    def _fresh_stats(self) -> DivideStats:
+        return DivideStats(chunk_slots=_resolve_chunk_slots(self.divide_chunk))
+
+    def _plan_on(self, graph: Graph, ext: np.ndarray, cursor: int,
+                 speculative: bool = False) -> Optional[PartPlan]:
+        """Divide: plan the part at ``cursor`` on ``graph``/``ext``. Pure —
+        runs on either the main thread (synchronous path) or the prefetch
+        worker (``speculative=True``, on the predicted shrink)."""
+        if cursor < len(self.thresholds):
+            t = self.thresholds[cursor]
+            dstats = self._fresh_stats()
+            cand_mask, extract_time = timed_candidates(
+                graph, ext, t, self.strategy,
+                chunk_slots=self.divide_chunk, stats=dstats,
+            )
+            if not cand_mask.any():
+                return PartPlan(
+                    cursor=cursor, name=f"core>={t}", threshold=t,
+                    part_g=None, part_local_ids=None, part_ext=None,
+                    cand_mask=cand_mask, dstats=dstats,
+                    extract_time_s=extract_time, speculative=speculative,
+                )
+            t0 = time.time()
+            part_g, part_local_ids = induced_subgraph(
+                graph, cand_mask, chunk_slots=self.divide_chunk, stats=dstats
+            )
+            part_ext = ext[cand_mask]
+            extract_time += time.time() - t0
+            return PartPlan(
+                cursor=cursor, name=f"core>={t}", threshold=t,
+                part_g=part_g, part_local_ids=part_local_ids,
+                part_ext=part_ext, cand_mask=cand_mask, dstats=dstats,
+                extract_time_s=extract_time, speculative=speculative,
+            )
+        # Final (bottom) part: everything left.
+        if graph.n_nodes == 0:
+            return None
+        return PartPlan(
+            cursor=cursor, name="rest", threshold=None,
+            part_g=graph, part_local_ids=None, part_ext=ext,
+            cand_mask=None, dstats=self._fresh_stats(),
+            extract_time_s=0.0, speculative=speculative,
+        )
+
+    def _build_plan(self, cursor: int) -> Optional[PartPlan]:
+        """Synchronous divide on the CURRENT remaining graph."""
+        return self._plan_on(
+            self.remaining_graph, self.state.ext_remaining, cursor
+        )
+
+    def _bucketize(self, plan: PartPlan) -> None:
+        """Reorder + bucketize the part — the device-layout half of the
+        divide stage (prefetched plans arrive with ``bg`` already built)."""
+        if plan.bg is not None or plan.part_g is None:
+            return
+        t0 = time.time()
+        # Reorder the part, not the whole graph: each part is a fresh id
+        # space, and locality only has to hold within the tiles actually
+        # decomposed together. part_ext stays in part-local original order;
+        # bucketize permutes it in and the engine un-permutes coreness out.
+        plan.bg = bucketize(
+            reorder_graph(
+                plan.part_g, self.reorder,
+                sample_edges=self.reorder_sample_edges,
+            ),
+            ext=plan.part_ext, row_align=self.row_align,
+            max_bucket_rows=self.max_bucket_rows,
+        )
+        plan.bucketize_time_s = time.time() - t0
+
+    # ---------------- prefetch stage ---------------- #
+    def _submit_prefetch(self, plan: PartPlan) -> None:
+        """Speculate past ``plan``'s conquer on the worker thread: shrink
+        the remaining graph as if EVERY candidate finalizes (exact by
+        construction for Exact-Divide, a bet for Rough) and build the next
+        part's plan on the predicted shrink. The worker gets the current
+        array references; the main thread only ever rebinds them."""
+        if self._executor is None or plan.is_rest or plan.is_empty:
+            return
+        assert self._future is None, "a prefetch is already in flight"
+        self._future = self._executor.submit(
+            self._prefetch_task,
+            self.remaining_graph, self.state.ext_remaining,
+            plan.cand_mask, plan.cursor,
+        )
+
+    def _prefetch_task(self, graph: Graph, ext: np.ndarray,
+                       cand_mask: np.ndarray, cursor: int) -> _Prefetch:
+        t0 = time.time()
+        stats = self._fresh_stats()
+        keep_local = ~cand_mask
+        ext_delta = external_info(
+            graph, keep_local, cand_mask,
+            chunk_slots=self.divide_chunk, stats=stats,
+        )
+        shrink_graph, keep_ids = induced_subgraph(
+            graph, keep_local, chunk_slots=self.divide_chunk, stats=stats
+        )
+        ext_next = ext[keep_local] + ext_delta
+        pf = _Prefetch(
+            base_cursor=cursor, shrink_graph=shrink_graph,
+            shrink_keep_ids=keep_ids, ext_next=ext_next,
+            shrink_stats=stats, shrink_time_s=time.time() - t0,
+        )
+        pf.plan = self._plan_on(
+            shrink_graph, ext_next, cursor + 1, speculative=True
+        )
+        if pf.plan is not None:
+            self._bucketize(pf.plan)
+        return pf
+
+    def _take_prefetch(self, cursor: int) -> Optional[_Prefetch]:
+        """Join the in-flight prefetch (if any). Worker failures re-raise
+        here — a broken divide pass is a real failure, not a missed bet."""
+        if self._future is None:
+            return None
+        fut, self._future = self._future, None
+        pf = fut.result()
+        return pf if pf.base_cursor == cursor else None
+
+    # ---------------- conquer stage ---------------- #
+    def _conquer(self, plan: PartPlan):
+        state = self.state
+        t0 = time.time()
+        init = None
+        start_sweep = 0
+        if self.pending_snap is not None:
+            snap = self.pending_snap
+            if snap.matches(state, plan.cursor, plan.part_g.n_nodes,
+                            plan.threshold):
+                init = snap.coreness
+                start_sweep = snap.sweep
+            else:
+                # Stale (e.g. a crash landed between a boundary save and
+                # the sweeps purge): remove it so it cannot shadow this
+                # run's snapshots on a later resume.
+                self._purge_sweeps()
+            # One shot either way: a snapshot can only belong to the first
+            # part a resumed run executes; anything else is stale.
+            self.pending_snap = None
+        hook = None
+        if self.sweep_checkpoint_every is not None:
+            every = max(1, int(self.sweep_checkpoint_every))
+            last_saved = {"c": None if init is None else np.asarray(init)}
+
+            def hook(it, coreness, _cursor=plan.cursor,
+                     _threshold=plan.threshold, _n=plan.part_g.n_nodes,
+                     _start=start_sweep, _last=last_saved):
+                if it % every:
+                    return
+                c = np.asarray(coreness, dtype=np.int32)
+                if _last["c"] is not None and np.array_equal(_last["c"], c):
+                    return  # fixed point (or no progress): nothing to save
+                save_s = SweepSnapshot(
+                    coreness=c, parts_done=_cursor, sweep=_start + it,
+                    n_part=_n, threshold=_threshold,
+                    thresholds=state.thresholds,
+                    fingerprint=state.fingerprint,
+                ).save(
+                    self.sweep_dir, manager=self.sweeps_mgr,
+                    blocking=not self.overlap,
+                )
+                _last["c"] = c
+                if self.on_sweep_saved is not None:
+                    self.on_sweep_saved(_cursor, _start + it, save_s)
+
+        self.preprocess_time_s += (
+            (time.time() - t0) + plan.bucketize_time_s + plan.extract_time_s
+        )
+        if init is not None or hook is not None:
+            res = self.decompose_fn(plan.bg, init_coreness=init, on_sweep=hook)
+        else:
+            res = self.decompose_fn(plan.bg)
+        return res, bitmap_density(plan.bg), start_sweep
+
+    # ---------------- merge + shrink ---------------- #
+    def _report_for(self, plan: PartPlan, res, density: float,
+                    start_sweep: int, finalized: int) -> PartReport:
+        return PartReport(
+            name=plan.name,
+            threshold=plan.threshold,
+            n_nodes=plan.part_g.n_nodes,
+            n_edges=plan.part_g.n_edges,
+            iterations=res.iterations,
+            comm_amount=res.comm_amount,
+            peak_bytes=res.peak_bytes,
+            extract_time_s=plan.extract_time_s,
+            decompose_time_s=res.wall_time_s,
+            finalized=finalized,
+            gathered_rows=res.gathered_rows,
+            full_sweep_rows=res.full_sweep_rows,
+            active_rows_per_iter=list(res.active_rows_per_iter),
+            collective_bytes=res.collective_bytes,
+            bitmap_density=density,
+            resumed_at_sweep=start_sweep,
+            prefetched=plan.speculative,
+        )
+
+    def _finalize_threshold(self, plan: PartPlan, res, density: float,
+                            start_sweep: int):
+        """Merge a threshold part's result into the global state and
+        append its report (before the shrink — matching the report order
+        the checkpoints have always serialized)."""
+        state = self.state
+        # Finalize nodes that resolved at >= t (all of them for Exact-Divide).
+        final_local = res.coreness >= plan.threshold
+        part_orig_ids = state.remaining_ids[plan.part_local_ids]
+        newly = part_orig_ids[final_local]
+        state.coreness[newly] = res.coreness[final_local]
+        state.finalized[newly] = True
+        report = self._report_for(
+            plan, res, density, start_sweep, int(final_local.sum())
+        )
+        self.parts.append(report)
+        return report, final_local
+
+    def _shrink(self, plan: PartPlan, final_local: np.ndarray,
+                report: PartReport) -> Optional[PartPlan]:
+        """Fold the finalized nodes out of the remaining graph. Adopts the
+        speculative shrink when the prediction held (byte-identical: the
+        masks coincide and every divide pass is deterministic); otherwise
+        discards it and recomputes synchronously, exactly as the
+        sequential path. Returns the prefetched next plan on a hit."""
+        state = self.state
+        pf = self._take_prefetch(plan.cursor)
+        if pf is not None and bool(final_local.all()):
+            self.prefetch_hits += 1
+            plan.dstats.merge(pf.shrink_stats)
+            state.ext_remaining = pf.ext_next
+            state.remaining_ids = state.remaining_ids[pf.shrink_keep_ids]
+            self.remaining_graph = pf.shrink_graph
+            self.preprocess_time_s += pf.shrink_time_s
+            report.divide_transient_bytes = plan.dstats.peak_transient_bytes
+            return pf.plan
+        if pf is not None:
+            self.prefetch_misses += 1
+        t0 = time.time()
+        newly_mask_local = np.zeros(self.remaining_graph.n_nodes, dtype=bool)
+        newly_mask_local[plan.part_local_ids[final_local]] = True
+        keep_local = ~newly_mask_local
+        ext_delta = external_info(
+            self.remaining_graph, keep_local, newly_mask_local,
+            chunk_slots=self.divide_chunk, stats=plan.dstats,
+        )
+        new_graph, keep_ids = induced_subgraph(
+            self.remaining_graph, keep_local,
+            chunk_slots=self.divide_chunk, stats=plan.dstats,
+        )
+        state.ext_remaining = state.ext_remaining[keep_local] + ext_delta
+        state.remaining_ids = state.remaining_ids[keep_ids]
+        self.remaining_graph = new_graph
+        self.preprocess_time_s += time.time() - t0
+        report.divide_transient_bytes = plan.dstats.peak_transient_bytes
+        return None
+
+    def _merge_rest(self, plan: PartPlan, res, density: float,
+                    start_sweep: int) -> None:
+        state = self.state
+        state.coreness[state.remaining_ids] = res.coreness
+        state.finalized[state.remaining_ids] = True
+        report = self._report_for(
+            plan, res, density, start_sweep, plan.part_g.n_nodes
+        )
+        self.parts.append(report)
+        state.remaining_ids = np.zeros(0, dtype=np.int64)
+        state.ext_remaining = np.zeros(0, dtype=np.int32)
+        state.complete = True
+        self._checkpoint_boundary(report)
+
+    # ---------------- checkpoint stage ---------------- #
+    def _purge_sweeps(self) -> None:
+        if self.sweep_dir is None:
+            return
+        if self.sweeps_mgr is not None:
+            # Waits out a pending async snapshot save first — the purge
+            # can never shred a write in flight.
+            self.sweeps_mgr.clear_steps()
+        else:
+            _clear_checkpoints(self.sweep_dir)
+
+    def _checkpoint_boundary(self, report: Optional[PartReport]) -> None:
+        """Save state at a part boundary, then fire the hook. Sweep
+        snapshots of the just-finished part are purged after the boundary
+        save (they are stale the moment the boundary exists; a crash
+        between save and purge is caught by snapshot validation)."""
+        if self.checkpoint_dir is not None:
+            on_done = None
+            if report is not None:
+                def on_done(_step, secs, _r=report):
+                    _r.save_wall_s = secs
+            blocked = self.state.save(
+                self.checkpoint_dir, manager=self.state_mgr,
+                blocking=not self.overlap, on_done=on_done,
+            )
+            self._purge_sweeps()
+            if report is not None:
+                report.save_time_s = blocked
+        if self.on_part_done is not None and report is not None:
+            self.on_part_done(len(self.parts) - 1, report)
+
+    # ---------------- scheduler ---------------- #
+    def run(self) -> None:
+        state = self.state
+        plan = self._build_plan(state.parts_done)
+        while plan is not None:
+            if plan.is_empty:
+                # No candidates at this threshold: consume the cursor.
+                state.parts_done = plan.cursor + 1
+                self._checkpoint_boundary(None)
+                plan = self._build_plan(plan.cursor + 1)
+                continue
+            self._bucketize(plan)
+            self._submit_prefetch(plan)
+            res, density, start_sweep = self._conquer(plan)
+            if plan.is_rest:
+                self._merge_rest(plan, res, density, start_sweep)
+                plan = None
+                continue
+            report, final_local = self._finalize_threshold(
+                plan, res, density, start_sweep
+            )
+            next_plan = self._shrink(plan, final_local, report)
+            state.parts_done = plan.cursor + 1
+            self._checkpoint_boundary(report)
+            if next_plan is None:
+                next_plan = self._build_plan(plan.cursor + 1)
+            plan = next_plan
+        if not state.complete:
+            # The shrink emptied the graph before the rest part.
+            state.complete = True
+            self._checkpoint_boundary(None)
+
+    def close(self, suppress_errors: bool = False) -> None:
+        """Drain the prefetch worker and both checkpoint managers. Runs on
+        EVERY exit path: after a crash-by-exception (the fault-injection
+        tests) the pending async saves land before the exception leaves
+        ``dc_kcore``, so the on-disk state at "crash" time is deterministic
+        and no worker thread outlives the call."""
+        if self._future is not None:
+            fut, self._future = self._future, None
+            exc = fut.exception()  # waits; consumes a worker failure
+            if exc is not None and not suppress_errors:
+                raise exc
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+        for mgr in (self.state_mgr, self.sweeps_mgr):
+            if mgr is None:
+                continue
+            try:
+                mgr.wait()
+            except BaseException:
+                if not suppress_errors:
+                    raise
+
+
 def dc_kcore(
     g: Graph,
     thresholds: Sequence[int] = (),
@@ -433,6 +1018,7 @@ def dc_kcore(
     divide_chunk: Optional[int] = None,
     sweep_checkpoint_every: Optional[int] = None,
     on_sweep_saved: Optional[SweepSavedHook] = None,
+    overlap: bool = False,
 ) -> tuple[np.ndarray, DCKCoreReport]:
     """Run DC-kCore. ``thresholds=()`` degenerates to the monolithic baseline
     (= the PSGraph competitor in the paper's tables).
@@ -443,6 +1029,18 @@ def dc_kcore(
     ``decompose_fn(bg, init_coreness=..., on_sweep=...)``, so a custom engine
     must accept those kwargs (see :data:`DecomposeFn`); without the flag it
     is always called as plain ``decompose_fn(bg)``.
+
+    ``overlap=True`` pipelines the stages: a single worker thread runs the
+    next part's divide passes and bucketize (and the shrink of the current
+    remaining graph) while the current part sweeps on the device, and
+    checkpoint saves go through the manager's async thread instead of
+    blocking the loop. The prefetch is *speculative* — it assumes every
+    candidate of the conquering part finalizes — and is validated against
+    the actual finalized set before being adopted, recomputed synchronously
+    on a miss (Exact-Divide always hits by construction). Coreness is
+    **byte-identical** with the flag on or off, resume included; only the
+    wall clock and the accelerator-idle fraction change
+    (:attr:`DCKCoreReport.idle_fraction`, Fig 16).
 
     ``reorder`` (``"identity"`` / ``"bfs"`` / ``"rcm"``) applies a
     locality-aware node ordering to *each part* before bucketizing it: the
@@ -470,9 +1068,11 @@ def dc_kcore(
     ``resume=True`` restores the latest complete checkpoint and re-enters at
     the first unfinished part — a killed run resumed this way produces
     coreness **byte-identical** to the uninterrupted run. ``on_part_done``
-    (``hook(part_index, report)``) fires after each part's save — the
-    fault-injection tests raise from it to simulate a crash at the worst
-    moment (state saved, next part not started).
+    (``hook(part_index, report)``) fires after each part's save (after the
+    save *enqueue* in overlapped mode — a crash raised from the hook still
+    drains the pending save before propagating, so the boundary is on disk
+    either way) — the fault-injection tests raise from it to simulate a
+    crash at the worst moment (state saved, next part not started).
 
     ``sweep_checkpoint_every=k`` (requires ``checkpoint_dir``) additionally
     saves a :class:`SweepSnapshot` every ``k`` conquer sweeps through the
@@ -535,6 +1135,7 @@ def dc_kcore(
                 total_time_s=time.time() - t_start,
                 preprocess_time_s=0.0,
                 resumed_parts=resumed_parts,
+                overlap=overlap,
             )
             return state.coreness.copy(), report
         # Rebuild the remaining graph from the original + finalized mask.
@@ -547,186 +1148,56 @@ def dc_kcore(
             "checkpoint remaining-id map inconsistent with finalized mask"
         )
 
-    parts: List[PartReport] = state.reports
-    preprocess = 0.0
+    state_mgr = sweeps_mgr = None
+    if checkpoint_dir is not None:
+        from repro.ckpt import CheckpointManager
 
-    def run_part(part_g: Graph, part_ext: np.ndarray, name: str,
-                 threshold: Optional[int], extract_time: float, cursor: int):
-        nonlocal preprocess, pending_snap
-        t0 = time.time()
-        # Reorder the part, not the whole graph: each part is a fresh id
-        # space, and locality only has to hold within the tiles actually
-        # decomposed together. part_ext stays in part-local original order;
-        # bucketize permutes it in and the engine un-permutes coreness out.
-        bg = bucketize(
-            reorder_graph(part_g, reorder, sample_edges=reorder_sample_edges),
-            ext=part_ext, row_align=row_align, max_bucket_rows=max_bucket_rows,
-        )
-        init = None
-        start_sweep = 0
-        if pending_snap is not None:
-            if pending_snap.matches(state, cursor, part_g.n_nodes, threshold):
-                init = pending_snap.coreness
-                start_sweep = pending_snap.sweep
-            else:
-                # Stale (e.g. a crash landed between a boundary save and
-                # the sweeps purge): remove it so it cannot shadow this
-                # run's snapshots on a later resume.
-                _clear_checkpoints(sweep_dir)
-            # One shot either way: a snapshot can only belong to the first
-            # part a resumed run executes; anything else is stale.
-            pending_snap = None
-        hook = None
-        if sweep_checkpoint_every is not None:
-            every = max(1, int(sweep_checkpoint_every))
-            last_saved = {"c": None if init is None else np.asarray(init)}
+        state_mgr = CheckpointManager(checkpoint_dir, keep=1)
+        sweeps_mgr = CheckpointManager(sweep_dir, keep=1)
 
-            def hook(it, coreness, _cursor=cursor, _threshold=threshold,
-                     _n=part_g.n_nodes, _start=start_sweep, _last=last_saved):
-                if it % every:
-                    return
-                c = np.asarray(coreness, dtype=np.int32)
-                if _last["c"] is not None and np.array_equal(_last["c"], c):
-                    return  # fixed point (or no progress): nothing to save
-                save_s = SweepSnapshot(
-                    coreness=c, parts_done=_cursor, sweep=_start + it,
-                    n_part=_n, threshold=_threshold,
-                    thresholds=state.thresholds, fingerprint=state.fingerprint,
-                ).save(sweep_dir)
-                _last["c"] = c
-                if on_sweep_saved is not None:
-                    on_sweep_saved(_cursor, _start + it, save_s)
-
-        preprocess += (time.time() - t0) + extract_time
-        if init is not None or hook is not None:
-            res = decompose_fn(bg, init_coreness=init, on_sweep=hook)
-        else:
-            res = decompose_fn(bg)
-        return res, bitmap_density(bg), start_sweep
-
-    def checkpoint_part(report: Optional[PartReport]):
-        """Save state at a part boundary, then fire the hook. Sweep
-        snapshots of the just-finished part are purged after the boundary
-        save (they are stale the moment the boundary exists; a crash
-        between save and purge is caught by snapshot validation)."""
-        if checkpoint_dir is not None:
-            save_s = state.save(checkpoint_dir)
-            _clear_checkpoints(sweep_dir)
-            if report is not None:
-                report.save_time_s = save_s
-        if on_part_done is not None and report is not None:
-            on_part_done(len(parts) - 1, report)
-
-    for ti in range(state.parts_done, len(thresholds)):
-        t = thresholds[ti]
-        dstats = DivideStats(chunk_slots=_resolve_chunk_slots(divide_chunk))
-        cand_mask, extract_time = timed_candidates(
-            remaining_graph, state.ext_remaining, t, strategy,
-            chunk_slots=divide_chunk, stats=dstats,
-        )
-        if not cand_mask.any():
-            state.parts_done = ti + 1
-            checkpoint_part(None)
-            continue
-        t_ext0 = time.time()
-        part_g, part_local_ids = induced_subgraph(
-            remaining_graph, cand_mask, chunk_slots=divide_chunk, stats=dstats
-        )
-        part_ext = state.ext_remaining[cand_mask]
-        extract_time += time.time() - t_ext0
-
-        res, density, start_sweep = run_part(
-            part_g, part_ext, f"core>={t}", t, extract_time, ti
-        )
-
-        # Finalize nodes that resolved at >= t (all of them for Exact-Divide).
-        final_local = res.coreness >= t
-        part_orig_ids = state.remaining_ids[part_local_ids]
-        newly = part_orig_ids[final_local]
-        state.coreness[newly] = res.coreness[final_local]
-        state.finalized[newly] = True
-
-        report = PartReport(
-            name=f"core>={t}",
-            threshold=t,
-            n_nodes=part_g.n_nodes,
-            n_edges=part_g.n_edges,
-            iterations=res.iterations,
-            comm_amount=res.comm_amount,
-            peak_bytes=res.peak_bytes,
-            extract_time_s=extract_time,
-            decompose_time_s=res.wall_time_s,
-            finalized=int(final_local.sum()),
-            gathered_rows=res.gathered_rows,
-            full_sweep_rows=res.full_sweep_rows,
-            active_rows_per_iter=list(res.active_rows_per_iter),
-            collective_bytes=res.collective_bytes,
-            bitmap_density=density,
-            resumed_at_sweep=start_sweep,
-        )
-        parts.append(report)
-
-        # Shrink the remaining graph; fold finalized neighbors into ext.
-        t_ext0 = time.time()
-        newly_mask_local = np.zeros(remaining_graph.n_nodes, dtype=bool)
-        newly_mask_local[part_local_ids[final_local]] = True
-        keep_local = ~newly_mask_local
-        ext_delta = external_info(
-            remaining_graph, keep_local, newly_mask_local,
-            chunk_slots=divide_chunk, stats=dstats,
-        )
-        new_graph, keep_ids = induced_subgraph(
-            remaining_graph, keep_local, chunk_slots=divide_chunk, stats=dstats
-        )
-        state.ext_remaining = state.ext_remaining[keep_local] + ext_delta
-        state.remaining_ids = state.remaining_ids[keep_ids]
-        remaining_graph = new_graph
-        preprocess += time.time() - t_ext0
-        report.divide_transient_bytes = dstats.peak_transient_bytes
-
-        state.parts_done = ti + 1
-        checkpoint_part(report)
-
-    # Final (bottom) part: everything left.
-    if remaining_graph.n_nodes > 0:
-        res, density, start_sweep = run_part(
-            remaining_graph, state.ext_remaining, "rest", None, 0.0,
-            len(thresholds),
-        )
-        state.coreness[state.remaining_ids] = res.coreness
-        state.finalized[state.remaining_ids] = True
-        report = PartReport(
-            name="rest",
-            threshold=None,
-            n_nodes=remaining_graph.n_nodes,
-            n_edges=remaining_graph.n_edges,
-            iterations=res.iterations,
-            comm_amount=res.comm_amount,
-            peak_bytes=res.peak_bytes,
-            extract_time_s=0.0,
-            decompose_time_s=res.wall_time_s,
-            finalized=remaining_graph.n_nodes,
-            gathered_rows=res.gathered_rows,
-            full_sweep_rows=res.full_sweep_rows,
-            active_rows_per_iter=list(res.active_rows_per_iter),
-            collective_bytes=res.collective_bytes,
-            bitmap_density=density,
-            resumed_at_sweep=start_sweep,
-        )
-        parts.append(report)
-        state.remaining_ids = np.zeros(0, dtype=np.int64)
-        state.ext_remaining = np.zeros(0, dtype=np.int32)
-        state.complete = True
-        checkpoint_part(report)
-    else:
-        state.complete = True
-        checkpoint_part(None)
+    pipeline = _PartPipeline(
+        state=state,
+        remaining_graph=remaining_graph,
+        thresholds=thresholds,
+        strategy=strategy,
+        decompose_fn=decompose_fn,
+        row_align=row_align,
+        reorder=reorder,
+        max_bucket_rows=max_bucket_rows,
+        reorder_sample_edges=reorder_sample_edges,
+        checkpoint_dir=checkpoint_dir,
+        sweep_dir=sweep_dir,
+        divide_chunk=divide_chunk,
+        sweep_checkpoint_every=sweep_checkpoint_every,
+        on_part_done=on_part_done,
+        on_sweep_saved=on_sweep_saved,
+        overlap=overlap,
+        pending_snap=pending_snap,
+        state_mgr=state_mgr,
+        sweeps_mgr=sweeps_mgr,
+    )
+    try:
+        pipeline.run()
+    except BaseException:
+        # Crash-by-exception (incl. the fault-injection hooks): drain the
+        # worker and pending saves FIRST, so the disk state the "crashed"
+        # run leaves behind is deterministic, then let the crash propagate.
+        pipeline.close(suppress_errors=True)
+        raise
+    pipeline.close()
 
     report = DCKCoreReport(
-        parts=parts,
+        parts=pipeline.parts,
         total_time_s=time.time() - t_start,
-        preprocess_time_s=preprocess,
+        preprocess_time_s=pipeline.preprocess_time_s,
         resumed_parts=resumed_parts,
+        overlap=overlap,
+        prefetch_hits=pipeline.prefetch_hits,
+        prefetch_misses=pipeline.prefetch_misses,
     )
-    assert (state.coreness >= 0).all(), "merge left unfinalized nodes"
+    if not bool((state.coreness >= 0).all()):
+        raise MergeIncompleteError(
+            f"merge left {int((state.coreness < 0).sum())} of {n} nodes "
+            f"unfinalized — every node must be resolved by exactly one part"
+        )
     return state.coreness, report

@@ -65,6 +65,15 @@ class DivideStats:
     summing would overstate the comparison. The regression gate is
     ``peak_transient_bytes < baseline_transient_bytes`` with the peak
     scaling with ``chunk_slots``, not the edge count.
+
+    **Thread safety.** An instance is plain mutable state and must be owned
+    by exactly one thread at a time. The extraction passes themselves
+    (:func:`induced_subgraph`, :func:`external_info`,
+    :func:`~repro.core.divide.exact_candidates`) touch no shared mutable
+    state — they read their argument arrays and write fresh outputs — so
+    the overlapped pipeline's prefetch worker runs them concurrently with
+    the main thread by giving each stage its *own* ``DivideStats`` and
+    folding them together afterwards with :meth:`merge`.
     """
 
     chunk_slots: int
@@ -73,6 +82,23 @@ class DivideStats:
     kept_slots: int = 0    # slots surviving the masks across all passes
     peak_transient_bytes: int = 0
     baseline_transient_bytes: int = 0
+
+    def merge(self, other: "DivideStats") -> None:
+        """Fold another pass's accounting into this one (counter sums, peak
+        and baseline maxes). Because :meth:`bump` and :meth:`note_pass` are
+        max-reductions and the counters are sums, threading one instance
+        through two passes and merging two per-pass instances record the
+        **same** numbers — which is what keeps the overlapped pipeline's
+        per-part reports byte-identical to the sequential schedule's."""
+        self.n_chunks += other.n_chunks
+        self.input_slots += other.input_slots
+        self.kept_slots += other.kept_slots
+        self.peak_transient_bytes = max(
+            self.peak_transient_bytes, other.peak_transient_bytes
+        )
+        self.baseline_transient_bytes = max(
+            self.baseline_transient_bytes, other.baseline_transient_bytes
+        )
 
     def bump(self, live_bytes: int) -> None:
         self.peak_transient_bytes = max(self.peak_transient_bytes, int(live_bytes))

@@ -2,10 +2,37 @@
 NOT set here — smoke tests and benches must see the single real CPU device.
 Multi-device tests spawn subprocesses with their own env (see
 tests/distributed_helpers.py)."""
+import threading
+import time
+
 import numpy as np
 import pytest
 
 from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
+
+# Worker threads the pipeline may spin up; every dc_kcore /
+# CheckpointManager exit path must drain them (close()/wait()), so one
+# outliving a test is a leak — equivalent to a missed wait()-on-exit.
+_PIPELINE_THREAD_PREFIXES = ("ckpt-save", "dckcore-prefetch")
+
+
+@pytest.fixture(autouse=True)
+def no_leaked_pipeline_threads():
+    """Fail any test that leaks a checkpoint-save or prefetch worker."""
+    yield
+    deadline = time.time() + 2.0  # grace: drains already in progress
+    while time.time() < deadline:
+        leaked = [
+            t for t in threading.enumerate()
+            if t.name.startswith(_PIPELINE_THREAD_PREFIXES) and t.is_alive()
+        ]
+        if not leaked:
+            return
+        time.sleep(0.05)
+    raise AssertionError(
+        f"leaked pipeline worker threads: {[t.name for t in leaked]} — "
+        f"a CheckpointManager.wait() or _PartPipeline.close() is missing"
+    )
 
 
 @pytest.fixture(scope="session")

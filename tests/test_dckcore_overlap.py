@@ -1,0 +1,92 @@
+"""Overlapped (staged-pipeline) DC-kCore == sequential, byte for byte.
+
+``overlap=True`` moves the divide passes, the next part's bucketize and
+the checkpoint saves off the critical path — speculatively for the divide
+(the worker bets every candidate of the conquering part finalizes). These
+tests pin the contract that makes that safe: the flag changes wall-clock
+only, never a byte of coreness, on every fixture, strategy, reorder and
+threshold plan; Exact-Divide speculation always validates (it finalizes
+all candidates by construction); a Rough-Divide miss degrades to the
+sequential recompute, not to a wrong answer.
+"""
+import numpy as np
+import pytest
+
+from repro.core.dckcore import MergeIncompleteError, dc_kcore
+from repro.graph.oracle import peel_coreness
+
+THRESHOLDS = (4, 12)
+
+
+def _run_both(g, **kw):
+    core_seq, rep_seq = dc_kcore(g, overlap=False, **kw)
+    core_ov, rep_ov = dc_kcore(g, overlap=True, **kw)
+    np.testing.assert_array_equal(core_seq, core_ov)
+    assert rep_seq.overlap is False and rep_ov.overlap is True
+    assert rep_seq.prefetch_hits == rep_seq.prefetch_misses == 0
+    return core_ov, rep_ov
+
+
+@pytest.mark.parametrize("strategy", ["rough", "exact"])
+def test_overlap_identical_ba(ba_graph, strategy):
+    core, _ = _run_both(ba_graph, thresholds=THRESHOLDS, strategy=strategy)
+    np.testing.assert_array_equal(core, peel_coreness(ba_graph))
+
+
+@pytest.mark.parametrize("strategy", ["rough", "exact"])
+def test_overlap_identical_rmat(rmat_graph, strategy):
+    core, rep = _run_both(
+        rmat_graph, thresholds=(3, 8, 16), strategy=strategy
+    )
+    np.testing.assert_array_equal(core, peel_coreness(rmat_graph))
+    # Every threshold part that ran submitted a speculation; each either
+    # hit or missed — none may be silently dropped.
+    submitted = sum(1 for p in rep.parts if p.threshold is not None)
+    assert rep.prefetch_hits + rep.prefetch_misses == submitted
+
+
+@pytest.mark.parametrize("strategy", ["rough", "exact"])
+def test_overlap_identical_er(er_graph, strategy):
+    _run_both(er_graph, thresholds=THRESHOLDS, strategy=strategy)
+
+
+def test_overlap_identical_with_reorder(rmat_graph):
+    _run_both(
+        rmat_graph, thresholds=THRESHOLDS, strategy="rough", reorder="bfs"
+    )
+
+
+def test_overlap_monolithic_baseline(er_graph):
+    """No thresholds = one rest part = nothing to prefetch; the flag must
+    still be a no-op for correctness."""
+    core, rep = _run_both(er_graph, thresholds=())
+    np.testing.assert_array_equal(core, peel_coreness(er_graph))
+    assert rep.prefetch_hits == rep.prefetch_misses == 0
+
+
+def test_exact_divide_speculation_always_hits(rmat_graph):
+    """Exact-Divide finalizes every candidate by construction, so the
+    prefetch worker's bet can never miss — and the parts that follow a
+    hit arrive with their divide already done (prefetched=True)."""
+    _, rep = dc_kcore(
+        rmat_graph, thresholds=(3, 8, 16), strategy="exact", overlap=True
+    )
+    assert rep.prefetch_misses == 0
+    assert rep.prefetch_hits >= 1
+    ran = [p for p in rep.parts]
+    # The first part is always divided synchronously; every later part
+    # follows a hit and must have been prefetched.
+    assert not ran[0].prefetched
+    assert all(p.prefetched for p in ran[1:])
+
+
+def test_overlap_empty_thresholds_in_plan(ba_graph):
+    """Thresholds above the max coreness yield empty parts mid-plan; the
+    scheduler must consume their cursors identically in both modes."""
+    _run_both(ba_graph, thresholds=(100, 4), strategy="exact")
+
+
+def test_merge_gate_is_a_real_exception():
+    """The final all-finalized gate must survive ``python -O`` — it is an
+    exception type, not a bare assert."""
+    assert issubclass(MergeIncompleteError, RuntimeError)

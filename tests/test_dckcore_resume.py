@@ -25,6 +25,11 @@ Sweep-granularity resume (mid-part, `sweep_checkpoint_every`):
     is ignored and resume falls back to the part-boundary checkpoint.
   * rmat15 at budget-planned thresholds runs the same mid-sweep cycle in
     the scheduled (slow) job.
+
+Overlapped mode (``overlap=True``): the same storms crash while a prefetch
+worker AND an async checkpoint save are in flight — the pipeline must
+drain both before the crash propagates, so resume stays byte-identical
+(rmat14 in tier-1, rmat15 slow-marked).
 """
 import json
 import os
@@ -467,6 +472,133 @@ def test_kill_and_resume_paper_shaped(tmp_path):
     np.testing.assert_array_equal(core, base)
     np.testing.assert_array_equal(core, peel_coreness(g))
     assert rep.resumed_parts >= 1
+
+
+# --------------------------------------------------------------------- #
+# Overlapped-mode fault injection (prefetch worker + async saves in flight)
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def rmat14_overlap_storm(rmat14_runs, tmp_path_factory):
+    """The sweep crash storm with ``overlap=True``: every crash fires from
+    ``on_sweep_saved`` while the prefetch worker is divides-deep in the
+    NEXT part and the just-enqueued snapshot save is still on the checkpoint
+    manager's thread — the worst moment the pipeline has. The contract: the
+    pipeline drains both before the exception leaves ``dc_kcore``, so every
+    resume sees the same deterministic disk state the sequential storm does.
+    """
+    g = rmat14_runs["g"]
+    thresholds = rmat14_runs["thresholds"]
+    ck = str(tmp_path_factory.mktemp("rmat14_overlap") / "ck")
+    cycles = 0
+    while True:
+        try:
+            core, rep = dc_kcore(
+                g, thresholds=thresholds, strategy="rough",
+                checkpoint_dir=ck, resume=cycles > 0,
+                sweep_checkpoint_every=1,
+                on_sweep_saved=kill_every_sweep_save,
+                overlap=True,
+            )
+            break
+        except SimulatedCrash:
+            cycles += 1
+            if cycles in (2, 5):
+                plant_tmp_junk(_sweep_dir(ck))
+            assert cycles < 500, "crash storm does not terminate"
+    return dict(core=core, rep=rep, cycles=cycles, ck=ck)
+
+
+def test_overlap_storm_byte_identical_and_oracle_exact(
+    rmat14_runs, rmat14_overlap_storm
+):
+    s = rmat14_overlap_storm
+    np.testing.assert_array_equal(s["core"], rmat14_runs["base_core"])
+    np.testing.assert_array_equal(s["core"], peel_coreness(rmat14_runs["g"]))
+    assert s["core"].dtype == rmat14_runs["base_core"].dtype
+
+
+def test_overlap_storm_matches_sequential_storm_shape(
+    rmat14_runs, rmat14_overlap_storm
+):
+    """Overlap changes wall-clock only: the overlapped storm crashes at the
+    same sweep boundaries as the sequential run would (same productive-sweep
+    count) and at least one part is provably warm-restarted mid-part."""
+    s = rmat14_overlap_storm
+    base_rep = rmat14_runs["base_rep"]
+    assert [p.name for p in s["rep"].parts] == [p.name for p in base_rep.parts]
+    assert s["cycles"] == sum(
+        b.iterations - 1 for b in base_rep.parts if b.iterations > 1
+    )
+    assert any(p.resumed_at_sweep > 0 for p in s["rep"].parts)
+
+
+def test_overlap_storm_disk_stays_bounded(rmat14_overlap_storm):
+    """Async saves must not change the retention story: one boundary step,
+    no snapshots (purged through clear_steps, which waits out pending
+    writes), planted junk never restored from."""
+    ck = rmat14_overlap_storm["ck"]
+    steps = sorted(
+        d for d in os.listdir(ck)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    assert len(steps) == 1
+    sweeps = [
+        d for d in os.listdir(_sweep_dir(ck))
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    assert sweeps == []
+
+
+def test_overlap_kill_at_every_part_boundary(tmp_path):
+    """Boundary crashes in overlapped mode: the crash fires from
+    ``on_part_done`` right after the boundary save was *enqueued* (not yet
+    necessarily written) and possibly with a prefetched next part in
+    flight; the drained save must land and every resume (also overlapped)
+    must be byte-identical to the sequential run."""
+    g = rmat(10, 8, seed=11)
+    thresholds = (16, 4)
+    base, _ = dc_kcore(g, thresholds=thresholds)
+    for k in range(3):  # core>=16, core>=4, rest
+        ck = str(tmp_path / f"ck{k}")
+        with pytest.raises(SimulatedCrash):
+            dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                     on_part_done=kill_after(k), overlap=True)
+        core, rep = dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck,
+                             resume=True, overlap=True)
+        np.testing.assert_array_equal(core, base)
+        assert rep.resumed_parts == k + 1
+
+
+@pytest.mark.slow
+def test_overlap_storm_paper_shaped(tmp_path):
+    """Scheduled-only: the overlapped mid-sweep crash storm at rmat15
+    scale — four crashes with prefetch + async saves in flight, then a
+    completing run; byte-identical to the sequential result."""
+    from repro.core.divide import plan_thresholds
+
+    g = rmat(15, 16, seed=3)
+    thresholds = plan_thresholds(g, g.memory_bytes() // 3) or [24]
+    base, _ = dc_kcore(g, thresholds=thresholds, strategy="rough")
+    ck = str(tmp_path / "ck")
+    cycles = 0
+
+    def killer(cursor, sweep, save_s):
+        if cycles < 4:
+            raise SimulatedCrash
+
+    while True:
+        try:
+            core, rep = dc_kcore(g, thresholds=thresholds, strategy="rough",
+                                 checkpoint_dir=ck, resume=cycles > 0,
+                                 sweep_checkpoint_every=2,
+                                 on_sweep_saved=killer, overlap=True)
+            break
+        except SimulatedCrash:
+            cycles += 1
+    np.testing.assert_array_equal(core, base)
+    np.testing.assert_array_equal(core, peel_coreness(g))
+    assert cycles == 4
+    assert any(p.resumed_at_sweep > 0 for p in rep.parts)
 
 
 def test_pipeline_state_roundtrip(tmp_path):
