@@ -34,6 +34,11 @@ scaled to CPU budget. The metrics mirror the paper's:
            sequential, on rmat14/rmat15 with checkpointing on — the
            divide/prefetch + async-checkpoint payoff (*repo addition;
            byte-identical coreness required)
+  Fig 17*  fused sweep kernel: fused vs unfused per-sweep wall time,
+           modeled achieved-vs-roofline HBM bytes, and the int16
+           estimate mode's bytes-moved reduction, on rmat14/rmat15
+           (*repo addition; bit-identical coreness required; also
+           written standalone to ``BENCH_fig17.json``)
   §5.2     correctness: every engine == BZ peeling oracle
 
 Besides the ``name,us_per_call,derived`` CSV on stdout, every emit is kept
@@ -372,6 +377,87 @@ def fig16_overlap_pipeline():
             )
 
 
+def fig17_fused_sweep():
+    """Fused sweep engine: fused-vs-unfused per-sweep wall time plus
+    modeled achieved-vs-roofline HBM bytes, and the int16 estimate mode's
+    measured bytes-moved reduction.
+
+    Both engines run the same frontier schedule, so the comparison is
+    per-sweep dispatch cost: the unfused baseline is ``op="count"`` (the
+    same suffix-count math, separate gather / h-index / push dispatches)
+    vs ``op="fused"`` (one kernel per row tile; interpret mode here, so
+    wall times measure dispatch structure, not TPU bandwidth — the
+    roofline fraction is the target-chip projection from the modeled
+    bytes). Gates: coreness bit-identical across engines and modes, and
+    int16 must report strictly fewer modeled bytes moved."""
+    from repro.roofline import hw
+    from repro.roofline.kcore_model import roofline_time_s
+
+    for name, g, _t in _graphs()[1:]:  # rmat14, rmat15
+        bg = bucketize(g)
+        results = {}
+        for engine in ("count", "fused"):
+            decompose(bg, op=engine)  # warm the jit/kernel caches
+            t0 = time.time()
+            res = decompose(bg, op=engine)
+            wall = time.time() - t0
+            results[engine] = (res, wall)
+            rt = roofline_time_s(res.sweep_bytes, res.sweep_flops)
+            bound = ("memory" if res.sweep_bytes / hw.HBM_BW
+                     >= res.sweep_flops / hw.PEAK_FLOPS_BF16 else "compute")
+            emit(
+                f"fig17/{name}/{engine}", wall / res.iterations * 1e6,
+                f"iters={res.iterations};"
+                f"sweep_bytes={res.sweep_bytes};"
+                f"sweep_flops={res.sweep_flops};"
+                f"roofline_s={rt:.3e};"
+                f"roofline_bound={bound};"
+                f"achieved_frac_interpret={res.sweep_bytes / wall / hw.HBM_BW:.3e};"
+                f"fused_mode={res.fused_mode or 'n/a'};"
+                f"est_dtype={res.est_dtype}",
+                wall_s=wall,
+            )
+        res_c, wall_c = results["count"]
+        res_f, wall_f = results["fused"]
+        assert np.array_equal(res_c.coreness, res_f.coreness), name
+        # int16 mode: same coreness, strictly fewer modeled bytes moved.
+        decompose(bg, op="fused", int16=True)  # warm
+        t0 = time.time()
+        res16 = decompose(bg, op="fused", int16=True)
+        wall16 = time.time() - t0
+        assert np.array_equal(res16.coreness, res_f.coreness), name
+        assert res16.est_dtype == "int16", name
+        assert res16.sweep_bytes < res_f.sweep_bytes, name
+        emit(
+            f"fig17/{name}/fused-int16", wall16 / res16.iterations * 1e6,
+            f"iters={res16.iterations};"
+            f"sweep_bytes={res16.sweep_bytes};"
+            f"bytes_reduction={1 - res16.sweep_bytes / res_f.sweep_bytes:.3f};"
+            f"est_dtype={res16.est_dtype}",
+            wall_s=wall16,
+        )
+        emit(
+            f"fig17/{name}/fused-vs-unfused", 0.0,
+            f"sweep_bytes_saved={res_c.sweep_bytes - res_f.sweep_bytes};"
+            f"bytes_ratio={res_f.sweep_bytes / max(res_c.sweep_bytes, 1):.3f};"
+            f"wall_ratio={wall_f / max(wall_c, 1e-9):.3f}",
+        )
+
+
+def write_fig17_artifact(path: str = "BENCH_fig17.json") -> str:
+    """Persist just the fig17 records (uploaded by CI next to the full
+    artifact so the fused-engine trajectory is a first-class file)."""
+    recs = [r for r in RECORDS if r["name"].startswith("fig17/")]
+    with open(path, "w") as f:
+        json.dump(
+            {"bench": "kcore-fig17-fused", "generated_unix": time.time(),
+             "records": recs},
+            f, indent=1,
+        )
+    print(f"# wrote {len(recs)} fig17 records to {path}", flush=True)
+    return path
+
+
 def fig10_fig11_parts():
     name, g, _ = _graphs()[1]
     deg = g.degrees
@@ -397,5 +483,7 @@ def run_all():
     fig14_streaming_ingest_and_resume()
     fig15_divide_transient()
     fig16_overlap_pipeline()
+    fig17_fused_sweep()
     write_artifact()
+    write_fig17_artifact()
     return ROWS

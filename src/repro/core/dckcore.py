@@ -1019,6 +1019,8 @@ def dc_kcore(
     sweep_checkpoint_every: Optional[int] = None,
     on_sweep_saved: Optional[SweepSavedHook] = None,
     overlap: bool = False,
+    engine: str = "sorted",
+    int16: bool = False,
 ) -> tuple[np.ndarray, DCKCoreReport]:
     """Run DC-kCore. ``thresholds=()`` degenerates to the monolithic baseline
     (= the PSGraph competitor in the paper's tables).
@@ -1029,6 +1031,13 @@ def dc_kcore(
     ``decompose_fn(bg, init_coreness=..., on_sweep=...)``, so a custom engine
     must accept those kwargs (see :data:`DecomposeFn`); without the flag it
     is always called as plain ``decompose_fn(bg)``.
+
+    ``engine`` selects the built-in conquer engine's sweep op
+    (``"sorted"`` / ``"count"`` / ``"kernel"`` / ``"fused"`` — see
+    :func:`repro.core.decompose.decompose`), and ``int16`` opts the fused
+    engine into the halved-width estimate mode (overflow-guarded). Both
+    apply only when ``decompose_fn`` is not given — a custom engine owns
+    its own configuration, so combining them raises.
 
     ``overlap=True`` pipelines the stages: a single worker thread runs the
     next part's divide passes and bucketize (and the shrink of the current
@@ -1086,7 +1095,13 @@ def dc_kcore(
     save — the mid-sweep fault-injection tests crash from it.
     """
     if decompose_fn is None:
-        decompose_fn = lambda bg, **kw: decompose(bg, **kw)  # noqa: E731
+        decompose_fn = (  # noqa: E731
+            lambda bg, **kw: decompose(bg, op=engine, int16=int16, **kw)
+        )
+    elif engine != "sorted" or int16:
+        raise ValueError("engine=/int16= configure the built-in engine; "
+                         "with decompose_fn they would be silently ignored "
+                         "— configure the custom engine instead")
     if resume and checkpoint_dir is None:
         raise ValueError("resume=True requires checkpoint_dir")
     if sweep_checkpoint_every is not None and checkpoint_dir is None:

@@ -42,7 +42,7 @@ import dataclasses
 import math
 import time
 from functools import partial
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +101,39 @@ def shard_buckets(bg: BucketedGraph, plan: MeshPlan, wire_dtype=jnp.int32):
     return out
 
 
+def _ring_bucket_bytes(padded_rows: int, ns: int, ms: int, cand: int,
+                       wire_bytes: int, include_ids: bool) -> int:
+    """Per-device ICI bytes of ONE bucket's sweep collectives (ring model).
+
+    The single shape-level formula every collective-bytes accounting in
+    this module derives from — the analytic planning model, the measured
+    per-iteration counter, and the dry-run's planned schedule can then
+    never disagree about what one bucket costs:
+
+    * psum of the ``[rows_loc, cand]`` int32 count partials over the slot
+      axes: a ring all-reduce moves ``2 (m-1)/m`` of the operand;
+    * all_gather of the ``[rows_loc]`` estimates (``wire_bytes`` wide) over
+      the node axes: ``(n-1)`` local shards per device — plus, when
+      ``include_ids``, the int32 ids all_gather issued alongside it.
+
+    ``padded_rows`` must already be the node-shard-padded row count.
+    """
+    rows_loc = padded_rows // ns
+    total = 0
+    if ms > 1:
+        total += int(2 * (ms - 1) / ms * rows_loc * cand * 4)
+    if ns > 1:
+        total += int((ns - 1) * rows_loc * (wire_bytes + (4 if include_ids else 0)))
+    return total
+
+
+def _dirty_psum_bytes(n_buckets: int, mesh_size: int) -> int:
+    """Per-device bytes of the frontier's [n_buckets] dirty-bit psum."""
+    if mesh_size <= 1:
+        return 0
+    return int(2 * (mesh_size - 1) / mesh_size * n_buckets * 4)
+
+
 def sweep_collective_bytes(bg: BucketedGraph, plan: MeshPlan, cand: int,
                            wire_bytes: int = 4,
                            active: Optional[np.ndarray] = None) -> int:
@@ -135,11 +168,8 @@ def sweep_collective_bytes(bg: BucketedGraph, plan: MeshPlan, cand: int,
         if active is not None and not active[bi]:
             continue
         rows = math.ceil(b.n_rows / ns) * ns
-        rows_loc = rows // ns
-        if ms > 1:
-            total += int(2 * (ms - 1) / ms * rows_loc * cand * 4)
-        if ns > 1:
-            total += int((ns - 1) * rows_loc * wire_bytes)
+        total += _ring_bucket_bytes(rows, ns, ms, cand, wire_bytes,
+                                    include_ids=False)
     return total
 
 
@@ -169,18 +199,71 @@ def measured_sweep_bytes(dev_buckets, plan: MeshPlan, cand: int,
     for bi, (ids, _neigh) in enumerate(dev_buckets):
         if not active[bi]:
             continue
-        rows_loc = ids.shape[0] // ns
-        if ms > 1:
-            total += int(2 * (ms - 1) / ms * rows_loc * cand * 4)
-        if ns > 1:
-            # est_full (wire dtype) + ids_full (int32) ring all-gathers.
-            total += int((ns - 1) * rows_loc * (wire_bytes + 4))
-    k = ns * ms
-    if frontier and k > 1:
+        # est_full (wire dtype) + ids_full (int32) ring all-gathers.
+        total += _ring_bucket_bytes(ids.shape[0], ns, ms, cand, wire_bytes,
+                                    include_ids=True)
+    if frontier:
         # dirty_next psum: [n_buckets] int32 over every mesh axis; runs
         # whenever the frontier sweep runs, active or not.
-        total += int(2 * (k - 1) / k * len(dev_buckets) * 4)
+        total += _dirty_psum_bytes(len(dev_buckets), ns * ms)
     return total
+
+
+def planned_collective_schedule(
+    bucket_rows: Sequence[int],
+    plan: MeshPlan,
+    cand: int,
+    *,
+    wire_bytes: int = 4,
+    n_iters: int = 30,
+    full_sweeps: int = 3,
+    decay: float = 0.6,
+    frontier: bool = True,
+) -> List[int]:
+    """Modeled per-iteration collective bytes for a run that never sweeps.
+
+    The dry-run feasibility tables need collective traffic without running
+    a single sweep, so this derives it from a *planned* frontier schedule
+    over the bucket shapes: the first ``full_sweeps`` iterations sweep
+    every bucket (estimates are still far from their fixed point
+    everywhere), after which the live row fraction decays geometrically by
+    ``decay`` per sweep and the frontier concentrates in the LAST buckets
+    of the list — bucketize emits degree classes ascending, and on
+    power-law graphs the dense classes (hubs) converge last (Montresor et
+    al.; paper Fig 8). Each planned iteration is costed with the same
+    per-bucket ring formula as the measured counter (ids all_gather and
+    dirty-bit psum included), so on a ``frontier=False`` run — where the
+    planned schedule is exact, every sweep full — the model reproduces
+    ``DecomposeResult.collective_bytes_per_iter`` byte for byte (the
+    pinning test of tests/test_distributed_kcore.py).
+
+    ``bucket_rows`` are the UNpadded per-bucket row counts (node-shard
+    padding is applied here, as :func:`shard_buckets` would).
+    """
+    ns, ms = plan.n_node_shards, plan.n_slot_shards
+    nb = len(bucket_rows)
+    padded = [math.ceil(r / ns) * ns for r in bucket_rows]
+    total_rows = sum(padded) or 1
+    dirty = _dirty_psum_bytes(nb, ns * ms) if frontier else 0
+    out: List[int] = []
+    for it in range(n_iters):
+        if not frontier or it < full_sweeps:
+            live = range(nb)
+        else:
+            budget = total_rows * (decay ** (it - full_sweeps + 1))
+            live_list, acc = [], 0
+            for bi in range(nb - 1, -1, -1):  # densest classes stay live
+                live_list.append(bi)
+                acc += padded[bi]
+                if acc >= budget:
+                    break
+            live = live_list
+        out.append(
+            sum(_ring_bucket_bytes(padded[bi], ns, ms, cand, wire_bytes,
+                                   include_ids=True) for bi in live)
+            + dirty
+        )
+    return out
 
 
 def _partial_counts(gathered, ext_rows, cand: int, cand_chunk: int = 256):

@@ -3,12 +3,16 @@
 The paper's per-iteration hot-spot is the h-index estimation over every
 node's gathered neighbor estimates (Algorithms 1/2):
 
-* ``hindex/`` — the fused single-device form: blocked sort-free
+* ``hindex/`` — the single-device h-index form: blocked sort-free
   compare-and-reduce straight to the new estimates.
 * ``counts/`` — the distributed form: per-shard partial suffix counts
   (the psum payload of core/distributed.py), tiled over candidates so the
   VMEM footprint is width-independent.
+* ``fused/`` — the whole sweep body in one kernel per row tile: in-kernel
+  neighbor gather + h-index + segment-reduce dirty-bit push, so no
+  ``[rows, width]`` intermediate ever round-trips HBM (the
+  ``engine="fused"`` path of core/decompose.py).
 
-Both validated in interpret mode on CPU against pure-jnp oracles
-(tests/test_kernels_*.py); target: TPU v5e.
+All validated in interpret mode on CPU against pure-jnp oracles
+(tests/test_kernels_*.py, tests/test_fused_engine.py); target: TPU v5e.
 """

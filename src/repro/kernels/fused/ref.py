@@ -1,0 +1,38 @@
+"""Pure-jnp reference for the fused sweep kernel.
+
+Mirrors the unfused ``core.decompose._sweep`` bucket body step for step —
+gather, h-index (count form), changed compare, ``[rows, width]``
+scatter-max dirty push — so differential tests can pin the fused kernel's
+three outputs against an implementation with no Pallas in it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hindex import hindex_count
+
+
+def fused_sweep_ref(c, ext_pad, ids, neigh, *, cand: int, track_dirty: bool = True):
+    """Reference (est, row_changed, dirty) for one bucket.
+
+    Same signature/contract as :func:`repro.kernels.fused.ops.fused_sweep_op`.
+    """
+    sentinel = c.shape[0] - 1
+    gathered = c[neigh].astype(jnp.int32)
+    ext_rows = ext_pad[ids]
+    cur_rows = c[ids].astype(jnp.int32)
+    cand = int(min(max(cand, 1), neigh.shape[1]))
+    # hindex_count has no candidate window; the kernel searches only
+    # candidates 1..cand, which equals min(h, cand) (feasibility is a
+    # monotone boundary) — clamp to mirror it.
+    est = jnp.minimum(
+        hindex_count(gathered, ext_rows, cand_chunk=min(256, cand)),
+        ext_rows + cand,
+    )
+    row_changed = (est != cur_rows) & (ids != sentinel)
+    dirty = jnp.zeros((c.shape[0],), jnp.int8)
+    if track_dirty:
+        dirty = dirty.at[neigh].max(
+            jnp.broadcast_to(row_changed[:, None], neigh.shape).astype(jnp.int8)
+        )
+    return est, row_changed.astype(jnp.int32), dirty

@@ -31,7 +31,12 @@ a locality-aware node ordering to each part before tiling
 (``--reorder-sample N`` computes it from an N-slot edge sample);
 ``--max-bucket-rows`` overrides the tile autotuner with a uniform row cap
 (``auto`` = degree-profile autotuner, ``none`` = one tile per degree
-class).
+class). ``--engine {sorted,count,kernel,fused}`` selects the conquer
+sweep engine — ``fused`` is the single-kernel Pallas sweep (gather +
+h-index + dirty push fused per row tile; interpret mode on CPU) — and
+``--int16`` opts the fused engine into the halved-width estimate mode
+(falls back to int32 automatically when any starting estimate reaches
+2^15; coreness is bit-identical in every case).
 """
 from __future__ import annotations
 
@@ -109,6 +114,14 @@ def main():
                     help="compute the ordering from an edge sample of this "
                          "many slots (out-of-core variant) instead of the "
                          "full CSR traversal")
+    ap.add_argument("--engine", choices=["sorted", "count", "kernel", "fused"],
+                    default="sorted",
+                    help="conquer sweep engine (fused = single-kernel "
+                         "Pallas sweep)")
+    ap.add_argument("--int16", action="store_true",
+                    help="fused engine only: int16 estimate vector for 2x "
+                         "effective bandwidth (overflow-guarded int32 "
+                         "fallback; bit-identical coreness)")
     ap.add_argument("--max-bucket-rows", type=parse_max_bucket_rows, default="auto",
                     help='tile row cap: "auto" (degree-profile autotuner), '
                          '"none" (one tile per degree class) or an int')
@@ -141,6 +154,8 @@ def main():
         ap.error("--resume requires --checkpoint-dir")
     if args.sweep_checkpoint_every is not None and args.checkpoint_dir is None:
         ap.error("--sweep-checkpoint-every requires --checkpoint-dir")
+    if args.int16 and args.engine != "fused":
+        ap.error("--int16 requires --engine fused")
 
     t0 = time.time()
     g, ingest = load_graph(args.graph, args.seed, edge_chunk=args.edge_chunk)
@@ -168,9 +183,11 @@ def main():
                             resume=args.resume,
                             divide_chunk=args.divide_chunk,
                             sweep_checkpoint_every=args.sweep_checkpoint_every,
-                            overlap=args.overlap)
+                            overlap=args.overlap,
+                            engine=args.engine, int16=args.int16)
     print(f"\nDC-kCore done in {report.total_time_s:.2f}s "
-          f"(preprocess {report.preprocess_time_s:.2f}s, reorder={args.reorder}, "
+          f"(preprocess {report.preprocess_time_s:.2f}s, engine={args.engine}"
+          f"{'+int16' if args.int16 else ''}, reorder={args.reorder}, "
           f"overlap={'on' if report.overlap else 'off'})")
     print(f"accelerator idle fraction: {report.idle_fraction:.3f} "
           f"(sweeping {report.total_decompose_time_s:.2f}s of "

@@ -109,12 +109,16 @@ def build_specs_for(n: int, buckets, plan, wire_dtype, id_dtype):
     return c, ext, active, node_tile, bucket_specs
 
 
-def run_case(name, n, m, cand, wire, multi_pod=True, tag=""):
+def run_case(name, n, m, cand, wire, multi_pod=True, tag="", n_iters=30):
     import jax
     import jax.numpy as jnp
 
     from repro.compat import cost_analysis_dict
-    from repro.core.distributed import MeshPlan, make_sweep_fn
+    from repro.core.distributed import (
+        MeshPlan,
+        make_sweep_fn,
+        planned_collective_schedule,
+    )
     from repro.launch.mesh import make_production_mesh
     from repro.roofline import hw
     from repro.roofline.analysis import parse_collectives, roofline_terms
@@ -150,6 +154,22 @@ def run_case(name, n, m, cand, wire, multi_pod=True, tag=""):
             "total_dev": total_dev,
         },
         "fits_16gb": bool(fits),
+    }
+    # Modeled collective traffic: a dry run never sweeps, so the table
+    # derives per-iteration ICI bytes from the planned frontier schedule
+    # over the modeled bucket shapes — same per-bucket ring formula as the
+    # live engine's measured counter (see planned_collective_schedule; the
+    # pinning test holds the two together). Reported even for infeasible
+    # layouts: the formula only needs shapes.
+    sched = planned_collective_schedule(
+        [r for _w, r in buckets], plan, cand,
+        wire_bytes=wire_bytes, n_iters=n_iters,
+    )
+    rec["modeled_collectives"] = {
+        "n_iters": n_iters,
+        "first_sweep_bytes": sched[0],
+        "total_bytes": sum(sched),
+        "per_iter_bytes": sched,
     }
     if n + 1 >= 2**31:
         # int64 ids double the tile bytes AND overflow JAX's int32 scatter
@@ -201,9 +221,15 @@ def _dump(rec):
         if rl
         else rec.get("skipped_compile", "")
     )
+    mc = rec.get("modeled_collectives")
+    coll = (
+        f"coll/iter0={mc['first_sweep_bytes']/2**30:.3f}GiB "
+        f"coll_total={mc['total_bytes']/2**30:.2f}GiB "
+        if mc else ""
+    )
     print(
         f"{rec['case']:34s} mesh={rec['mesh']} fits16g={rec['fits_16gb']} "
-        f"dev_mem={rec['memory_model']['total_dev']/2**30:.1f}GiB {extra}",
+        f"dev_mem={rec['memory_model']['total_dev']/2**30:.1f}GiB {coll}{extra}",
         flush=True,
     )
 

@@ -569,6 +569,118 @@ def test_overlap_kill_at_every_part_boundary(tmp_path):
         assert rep.resumed_parts == k + 1
 
 
+# --------------------------------------------------------------------- #
+# Fused-engine fault injection (engine="fused" + overlap)
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def rmat14_fused_storm(rmat14_runs, tmp_path_factory):
+    """Bounded crash storm on the fused engine with ``overlap=True``: crash
+    at the first sweep-snapshot save of the first three runs (three mid-part
+    re-entries on the fused path, each warm-restarting one sweep deeper),
+    then let the fourth run complete. Bounded — not the every-boundary storm
+    above — because a fused interpret-mode sweep costs ~2x the unfused one;
+    the coverage that matters is that the fused engine honors the same
+    ``on_sweep``/``init_coreness`` snapshot contract, which three mid-part
+    re-entries plus planted ``.tmp`` junk exercise."""
+    g = rmat14_runs["g"]
+    thresholds = rmat14_runs["thresholds"]
+    ck = str(tmp_path_factory.mktemp("rmat14_fused") / "ck")
+    cycles = 0
+
+    def killer(cursor, sweep, save_s):
+        if cycles < 3:
+            raise SimulatedCrash(f"killed after sweep {sweep} of part {cursor}")
+
+    while True:
+        try:
+            core, rep = dc_kcore(
+                g, thresholds=thresholds, strategy="rough",
+                checkpoint_dir=ck, resume=cycles > 0,
+                sweep_checkpoint_every=1,
+                on_sweep_saved=killer,
+                engine="fused", overlap=True,
+            )
+            break
+        except SimulatedCrash:
+            cycles += 1
+            if cycles == 2:
+                plant_tmp_junk(_sweep_dir(ck))
+            assert cycles < 10, "bounded fused storm does not terminate"
+    return dict(core=core, rep=rep, cycles=cycles, ck=ck)
+
+
+def test_fused_storm_byte_identical_and_oracle_exact(rmat14_runs, rmat14_fused_storm):
+    """Byte-identity here is cross-engine too: the baseline run used the
+    sorted engine, the storm ran fused end to end."""
+    s = rmat14_fused_storm
+    np.testing.assert_array_equal(s["core"], rmat14_runs["base_core"])
+    np.testing.assert_array_equal(s["core"], peel_coreness(rmat14_runs["g"]))
+    assert s["core"].dtype == rmat14_runs["base_core"].dtype
+
+
+def test_fused_storm_warm_restarted_midpart(rmat14_runs, rmat14_fused_storm):
+    """Each crash landed one sweep deeper into part 0, so the completing
+    run re-entered part 0 exactly at sweep 3 and finished the remainder."""
+    s = rmat14_fused_storm
+    base_rep = rmat14_runs["base_rep"]
+    assert s["cycles"] == 3
+    assert [p.name for p in s["rep"].parts] == [p.name for p in base_rep.parts]
+    p0, b0 = s["rep"].parts[0], base_rep.parts[0]
+    assert p0.resumed_at_sweep == 3
+    assert p0.iterations == b0.iterations - 3
+    assert all(p.resumed_at_sweep == 0 for p in s["rep"].parts[1:])
+
+
+def test_fused_storm_disk_stays_bounded(rmat14_fused_storm):
+    """Same retention contract as the unfused storms: one boundary step on
+    disk, snapshots purged, planted junk never restored from."""
+    ck = rmat14_fused_storm["ck"]
+    steps = sorted(
+        d for d in os.listdir(ck)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    assert len(steps) == 1
+    sweeps = [
+        d for d in os.listdir(_sweep_dir(ck))
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    assert sweeps == []
+
+
+@pytest.mark.slow
+def test_fused_overlap_storm_paper_shaped(tmp_path):
+    """Scheduled-only: the fused-engine overlapped mid-sweep crash storm at
+    rmat15 scale with budget-planned thresholds — four crashes with
+    prefetch + async saves in flight, then a completing run; byte-identical
+    to the sequential sorted-engine result."""
+    from repro.core.divide import plan_thresholds
+
+    g = rmat(15, 16, seed=3)
+    thresholds = plan_thresholds(g, g.memory_bytes() // 3) or [24]
+    base, _ = dc_kcore(g, thresholds=thresholds, strategy="rough")
+    ck = str(tmp_path / "ck")
+    cycles = 0
+
+    def killer(cursor, sweep, save_s):
+        if cycles < 4:
+            raise SimulatedCrash
+
+    while True:
+        try:
+            core, rep = dc_kcore(g, thresholds=thresholds, strategy="rough",
+                                 checkpoint_dir=ck, resume=cycles > 0,
+                                 sweep_checkpoint_every=2,
+                                 on_sweep_saved=killer,
+                                 engine="fused", overlap=True)
+            break
+        except SimulatedCrash:
+            cycles += 1
+    np.testing.assert_array_equal(core, base)
+    np.testing.assert_array_equal(core, peel_coreness(g))
+    assert cycles == 4
+    assert any(p.resumed_at_sweep > 0 for p in rep.parts)
+
+
 @pytest.mark.slow
 def test_overlap_storm_paper_shaped(tmp_path):
     """Scheduled-only: the overlapped mid-sweep crash storm at rmat15

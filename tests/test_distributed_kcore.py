@@ -207,6 +207,53 @@ print("OK", res.collective_bytes, base.collective_bytes)
     assert "OK" in out
 
 
+def test_planned_schedule_pins_measured_bytes():
+    """The dry-run's planned collective schedule against one measured run:
+    on a frontier=False run every sweep is full, the planned schedule is
+    exact, and the model must reproduce the live engine's per-iteration
+    counter byte for byte. On a frontier run only sweep 0 is guaranteed
+    full — the default decayed schedule must pin exactly that iteration,
+    and its modeled tail must decay monotonically toward the densest-class
+    floor."""
+    out = run_with_devices(
+        _COMMON
+        + r"""
+from repro.core.distributed import planned_collective_schedule
+from repro.core.hindex import hindex_of_sequence
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+plan = MeshPlan(mesh=mesh, node_axes=("data",), slot_axes=("model",))
+g = rmat(9, 8, seed=2)
+bg = bucketize(g)
+cand = max(1, hindex_of_sequence(bg.degrees.astype(np.int64) + bg.ext))
+rows = [b.n_rows for b in bg.buckets]
+# frontier=False: every sweep full, no dirty psum — model is exact per iter.
+base = decompose_distributed(bg, plan, frontier=False)
+sched = planned_collective_schedule(rows, plan, cand,
+                                    n_iters=base.iterations,
+                                    full_sweeps=base.iterations,
+                                    frontier=False)
+assert sched == list(base.collective_bytes_per_iter), (
+    sched, base.collective_bytes_per_iter)
+# frontier run: the default decayed schedule pins the guaranteed-full
+# first sweep (ids all_gather + dirty psum included).
+res = decompose_distributed(bg, plan)
+dflt = planned_collective_schedule(rows, plan, cand, n_iters=12)
+assert dflt[0] == res.collective_bytes_per_iter[0], (
+    dflt[0], res.collective_bytes_per_iter[0])
+# Modeled tail: monotone non-increasing, strictly below a full sweep once
+# the geometric decay has concentrated the frontier in the dense classes.
+assert all(a >= b for a, b in zip(dflt, dflt[1:]))
+assert dflt[-1] < dflt[0]
+# int16 wire shrinks every planned iteration (the estimate all_gather term).
+d16 = planned_collective_schedule(rows, plan, cand, n_iters=12, wire_bytes=2)
+assert all(a < b for a, b in zip(d16, dflt))
+print("OK")
+""",
+        n_devices=8,
+    )
+    assert "OK" in out
+
+
 def test_distributed_with_pallas_counts_kernel():
     """Distributed sweep with the Pallas partial-counts kernel == oracle."""
     out = run_with_devices(
