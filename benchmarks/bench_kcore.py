@@ -39,6 +39,11 @@ scaled to CPU budget. The metrics mirror the paper's:
            estimate mode's bytes-moved reduction, on rmat14/rmat15
            (*repo addition; bit-identical coreness required; also
            written standalone to ``BENCH_fig17.json``)
+  Fig 18*  part-parallel conquer: wall-clock, per-slice utilization,
+           wave count and speculation counters of the wave scheduler,
+           ``part_parallel=2`` vs sequential, on rmat14/rmat15 with
+           Exact-Divide (*repo addition; byte-identical coreness and
+           zero discards required)
   §5.2     correctness: every engine == BZ peeling oracle
 
 Besides the ``name,us_per_call,derived`` CSV on stdout, every emit is kept
@@ -444,6 +449,46 @@ def fig17_fused_sweep():
         )
 
 
+def fig18_part_parallel():
+    """Part-parallel conquer: wall-clock and per-slice utilization of the
+    wave scheduler, ``part_parallel=2`` (thread mode — slices share the
+    single CPU device, so this measures scheduling overhead + host-side
+    concurrency, not a 2x device speedup) vs sequential, on rmat14/rmat15
+    with Exact-Divide (the wave chain never mispredicts). Gates: coreness
+    byte-identical with the flag on and off, zero speculative discards,
+    and every conquered part carries a placement stamp."""
+    for name, g, t in _graphs()[1:]:  # rmat14, rmat15
+        thresholds = (max(2, t // 2), t)  # 3 parts: two divides + rest
+        dc_kcore(g, thresholds=thresholds, strategy="exact")  # warm jit
+        t0 = time.time()
+        core_seq, rep_seq = dc_kcore(g, thresholds=thresholds, strategy="exact")
+        wall_seq = time.time() - t0
+        t0 = time.time()
+        core_par, rep = dc_kcore(g, thresholds=thresholds, strategy="exact",
+                                 part_parallel=2)
+        wall_par = time.time() - t0
+        assert np.array_equal(core_par, core_seq), name
+        assert rep.speculation_discards == 0, name  # exact always validates
+        assert all(p.slice_index >= 0 and p.wave >= 0 for p in rep.parts), name
+        util = ";".join(f"slice{i}={u:.3f}"
+                        for i, u in enumerate(rep.slice_utilization))
+        emit(
+            f"fig18/{name}/sequential", wall_seq * 1e6,
+            f"parts={len(rep_seq.parts)}",
+        )
+        emit(
+            f"fig18/{name}/part-parallel-2", wall_par * 1e6,
+            f"conquer_wall_s={rep.conquer_wall_s:.4f};"
+            f"{util};"
+            f"waves={max(p.wave for p in rep.parts) + 1};"
+            f"prefetch_hits={rep.prefetch_hits};"
+            f"speculation_discards={rep.speculation_discards};"
+            f"boundary_exchange_bytes={rep.boundary_exchange_bytes};"
+            f"wall_ratio_vs_seq={wall_par / max(wall_seq, 1e-9):.3f}",
+            gathered_rows=rep.total_gathered_rows,
+        )
+
+
 def write_fig17_artifact(path: str = "BENCH_fig17.json") -> str:
     """Persist just the fig17 records (uploaded by CI next to the full
     artifact so the fused-engine trajectory is a first-class file)."""
@@ -484,6 +529,7 @@ def run_all():
     fig15_divide_transient()
     fig16_overlap_pipeline()
     fig17_fused_sweep()
+    fig18_part_parallel()
     write_artifact()
     write_fig17_artifact()
     return ROWS

@@ -91,6 +91,49 @@ def cost_analysis_dict(compiled) -> Dict[str, float]:
     return dict(ca)
 
 
+def backends_initialized() -> bool:
+    """Has jax already instantiated a backend (device queries ran)?
+
+    Gates the launch layer's ``XLA_FLAGS`` edits: forcing a host device
+    count after backend init silently does nothing, so callers raise
+    instead. Reaches into ``jax._src.xla_bridge`` (no public probe exists);
+    defaults to ``False`` if the internal layout shifts — the worst case is
+    a clear late-flag failure instead of an early one.
+    """
+    try:
+        from jax._src import xla_bridge
+
+        return bool(xla_bridge._backends)
+    except Exception:
+        return False
+
+
+def distributed_initialize(
+    coordinator_address: str,
+    num_processes: int,
+    process_id: int,
+    local_device_ids: Optional[Sequence[int]] = None,
+) -> None:
+    """Version-portable ``jax.distributed.initialize``.
+
+    ``local_device_ids`` is forwarded only when given; a TypeError from an
+    older signature retries without it (the 0.4.x fallback — the process
+    then owns all its local devices, which is the common case anyway).
+    """
+    kwargs: Dict[str, Any] = {
+        "coordinator_address": coordinator_address,
+        "num_processes": int(num_processes),
+        "process_id": int(process_id),
+    }
+    if local_device_ids is not None:
+        kwargs["local_device_ids"] = list(local_device_ids)
+    try:
+        jax.distributed.initialize(**kwargs)
+    except TypeError:
+        kwargs.pop("local_device_ids", None)
+        jax.distributed.initialize(**kwargs)
+
+
 @jax.custom_vjp
 def optimization_barrier(x):
     """``jax.lax.optimization_barrier`` that is reverse-mode differentiable.

@@ -195,6 +195,13 @@ class PartReport:
     # True when this part's divide ran speculatively on the prefetch
     # worker (and the speculation was adopted).
     prefetched: bool = False
+    # Part-parallel placement (``dc_kcore(part_parallel=...)``): which mesh
+    # slice conquered this part, which wave it ran in, and the scheduler's
+    # modeled cost (collective + HBM bytes) that placed it. Defaults mark
+    # the sequential path (and keep old checkpoints restorable).
+    slice_index: int = -1
+    wave: int = -1
+    modeled_cost_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -206,6 +213,16 @@ class DCKCoreReport:
     overlap: bool = False   # divide/checkpoint overlapped with conquer?
     prefetch_hits: int = 0    # speculative shrinks adopted
     prefetch_misses: int = 0  # speculative shrinks discarded + recomputed
+    # Part-parallel conquer (0 = sequential): slice count, wall seconds the
+    # wave executor was running, per-slice busy seconds (sweep wall summed
+    # over the slice's parts), speculative conquers discarded after a
+    # mispredicted wave, and the collective bytes the device-resident E(v)
+    # boundary folds moved (0 when the fold ran on the host).
+    part_parallel: int = 0
+    conquer_wall_s: float = 0.0
+    slice_busy_s: List[float] = dataclasses.field(default_factory=list)
+    speculation_discards: int = 0
+    boundary_exchange_bytes: int = 0
 
     @property
     def total_comm(self) -> int:
@@ -259,6 +276,15 @@ class DCKCoreReport:
         if self.total_time_s <= 0:
             return 0.0
         return max(0.0, 1.0 - self.total_decompose_time_s / self.total_time_s)
+
+    @property
+    def slice_utilization(self) -> List[float]:
+        """Per-slice busy fraction of the wave executor's wall clock —
+        how evenly the LPT schedule filled the slices (empty when
+        sequential)."""
+        if self.conquer_wall_s <= 0:
+            return [0.0 for _ in self.slice_busy_s]
+        return [min(1.0, b / self.conquer_wall_s) for b in self.slice_busy_s]
 
 
 @dataclasses.dataclass
@@ -614,6 +640,10 @@ class _PartPipeline:
         pending_snap: Optional[SweepSnapshot],
         state_mgr=None,
         sweeps_mgr=None,
+        part_parallel: Optional[int] = None,
+        slice_decomposes: Optional[List[DecomposeFn]] = None,
+        slice_specs: Optional[list] = None,
+        fold_plan=None,
     ):
         self.state = state
         self.remaining_graph = remaining_graph
@@ -634,6 +664,21 @@ class _PartPipeline:
         self.pending_snap = pending_snap
         self.state_mgr = state_mgr
         self.sweeps_mgr = sweeps_mgr
+
+        # Part-parallel conquer: slice count, one DecomposeFn per mesh
+        # slice (None = every slice thread shares ``decompose_fn``), the
+        # pure SliceSpecs the scheduler prices against, and the GLOBAL
+        # MeshPlan routing the E(v) boundary fold through the device
+        # collectives (None = host fold).
+        self.part_parallel = part_parallel
+        self.slice_decomposes = slice_decomposes
+        self.slice_specs = slice_specs
+        self.fold_plan = fold_plan
+        self.slice_busy_s = [0.0] * (part_parallel or 0)
+        self.conquer_wall_s = 0.0
+        self.boundary_exchange_bytes = 0
+        self.speculation_discards = 0
+        self._wave_index = 0
 
         self.parts: List[PartReport] = state.reports
         self.preprocess_time_s = 0.0
@@ -733,26 +778,54 @@ class _PartPipeline:
             plan.cand_mask, plan.cursor,
         )
 
-    def _prefetch_task(self, graph: Graph, ext: np.ndarray,
-                       cand_mask: np.ndarray, cursor: int) -> _Prefetch:
+    def _fold_external(self, graph: Graph, keep_local: np.ndarray,
+                       upper_local: np.ndarray, stats: DivideStats) -> np.ndarray:
+        """E(v) boundary fold — host pass, or device collectives when the
+        pipeline holds a global mesh plan (part-parallel distributed mode).
+        Bit-identical either way (differentially tested); the device path
+        additionally accounts its psum bytes. Only ever called from the
+        thread that owns ``stats`` — the byte counter is main-thread-only
+        because the prefetch worker never runs with a fold plan (overlap
+        and part_parallel are mutually exclusive)."""
+        if self.fold_plan is not None:
+            from repro.core.distributed import device_external_info
+
+            delta, moved = device_external_info(
+                graph, keep_local, upper_local, self.fold_plan,
+                chunk_slots=self.divide_chunk, stats=stats,
+            )
+            self.boundary_exchange_bytes += moved
+            return delta
+        return external_info(
+            graph, keep_local, upper_local,
+            chunk_slots=self.divide_chunk, stats=stats,
+        )
+
+    def _speculative_shrink(self, graph: Graph, ext: np.ndarray,
+                            cand_mask: np.ndarray, cursor: int) -> _Prefetch:
+        """Shrink ``graph`` as if EVERY candidate of part ``cursor``
+        finalizes — the shared speculation body of the overlap prefetch
+        (depth 1, worker thread) and the part-parallel wave planner
+        (depth ``part_parallel``, main thread)."""
         t0 = time.time()
         stats = self._fresh_stats()
         keep_local = ~cand_mask
-        ext_delta = external_info(
-            graph, keep_local, cand_mask,
-            chunk_slots=self.divide_chunk, stats=stats,
-        )
+        ext_delta = self._fold_external(graph, keep_local, cand_mask, stats)
         shrink_graph, keep_ids = induced_subgraph(
             graph, keep_local, chunk_slots=self.divide_chunk, stats=stats
         )
         ext_next = ext[keep_local] + ext_delta
-        pf = _Prefetch(
+        return _Prefetch(
             base_cursor=cursor, shrink_graph=shrink_graph,
             shrink_keep_ids=keep_ids, ext_next=ext_next,
             shrink_stats=stats, shrink_time_s=time.time() - t0,
         )
+
+    def _prefetch_task(self, graph: Graph, ext: np.ndarray,
+                       cand_mask: np.ndarray, cursor: int) -> _Prefetch:
+        pf = self._speculative_shrink(graph, ext, cand_mask, cursor)
         pf.plan = self._plan_on(
-            shrink_graph, ext_next, cursor + 1, speculative=True
+            pf.shrink_graph, pf.ext_next, cursor + 1, speculative=True
         )
         if pf.plan is not None:
             self._bucketize(pf.plan)
@@ -768,12 +841,22 @@ class _PartPipeline:
         return pf if pf.base_cursor == cursor else None
 
     # ---------------- conquer stage ---------------- #
-    def _conquer(self, plan: PartPlan):
+    def _conquer(self, plan: PartPlan, fn: Optional[DecomposeFn] = None,
+                 lead: bool = True, account: bool = True):
+        """Conquer one part. ``fn`` overrides the engine (a wave slice's
+        decompose); ``lead=False`` (a wave's non-first parts) skips the
+        pending-snapshot consult and the sweep-snapshot hook — only the
+        part the boundary checkpoint actually points at may write
+        snapshots, so a crashed wave leaves exactly the disk state a
+        sequential run crashed in that part would. ``account=False``
+        defers the preprocess-time accounting to the caller (the wave
+        runner books it on the main thread — slice threads must not race
+        on the counter)."""
         state = self.state
         t0 = time.time()
         init = None
         start_sweep = 0
-        if self.pending_snap is not None:
+        if lead and self.pending_snap is not None:
             snap = self.pending_snap
             if snap.matches(state, plan.cursor, plan.part_g.n_nodes,
                             plan.threshold):
@@ -788,7 +871,7 @@ class _PartPipeline:
             # part a resumed run executes; anything else is stale.
             self.pending_snap = None
         hook = None
-        if self.sweep_checkpoint_every is not None:
+        if lead and self.sweep_checkpoint_every is not None:
             every = max(1, int(self.sweep_checkpoint_every))
             last_saved = {"c": None if init is None else np.asarray(init)}
 
@@ -813,13 +896,15 @@ class _PartPipeline:
                 if self.on_sweep_saved is not None:
                     self.on_sweep_saved(_cursor, _start + it, save_s)
 
-        self.preprocess_time_s += (
-            (time.time() - t0) + plan.bucketize_time_s + plan.extract_time_s
-        )
+        if account:
+            self.preprocess_time_s += (
+                (time.time() - t0) + plan.bucketize_time_s + plan.extract_time_s
+            )
+        fn = fn if fn is not None else self.decompose_fn
         if init is not None or hook is not None:
-            res = self.decompose_fn(plan.bg, init_coreness=init, on_sweep=hook)
+            res = fn(plan.bg, init_coreness=init, on_sweep=hook)
         else:
-            res = self.decompose_fn(plan.bg)
+            res = fn(plan.bg)
         return res, bitmap_density(plan.bg), start_sweep
 
     # ---------------- merge + shrink ---------------- #
@@ -870,26 +955,39 @@ class _PartPipeline:
         masks coincide and every divide pass is deterministic); otherwise
         discards it and recomputes synchronously, exactly as the
         sequential path. Returns the prefetched next plan on a hit."""
-        state = self.state
         pf = self._take_prefetch(plan.cursor)
         if pf is not None and bool(final_local.all()):
             self.prefetch_hits += 1
-            plan.dstats.merge(pf.shrink_stats)
-            state.ext_remaining = pf.ext_next
-            state.remaining_ids = state.remaining_ids[pf.shrink_keep_ids]
-            self.remaining_graph = pf.shrink_graph
-            self.preprocess_time_s += pf.shrink_time_s
-            report.divide_transient_bytes = plan.dstats.peak_transient_bytes
+            self._adopt_shrink(plan, pf, report)
             return pf.plan
         if pf is not None:
             self.prefetch_misses += 1
+        self._shrink_sync(plan, final_local, report)
+        return None
+
+    def _adopt_shrink(self, plan: PartPlan, pf: _Prefetch,
+                      report: PartReport) -> None:
+        """Adopt a validated speculative shrink (prediction held — the
+        masks coincide, so this state is byte-identical to the sync fold)."""
+        state = self.state
+        plan.dstats.merge(pf.shrink_stats)
+        state.ext_remaining = pf.ext_next
+        state.remaining_ids = state.remaining_ids[pf.shrink_keep_ids]
+        self.remaining_graph = pf.shrink_graph
+        self.preprocess_time_s += pf.shrink_time_s
+        report.divide_transient_bytes = plan.dstats.peak_transient_bytes
+
+    def _shrink_sync(self, plan: PartPlan, final_local: np.ndarray,
+                     report: PartReport) -> None:
+        """The sequential fold: shrink the remaining graph by the part's
+        ACTUALLY finalized nodes."""
+        state = self.state
         t0 = time.time()
         newly_mask_local = np.zeros(self.remaining_graph.n_nodes, dtype=bool)
         newly_mask_local[plan.part_local_ids[final_local]] = True
         keep_local = ~newly_mask_local
-        ext_delta = external_info(
-            self.remaining_graph, keep_local, newly_mask_local,
-            chunk_slots=self.divide_chunk, stats=plan.dstats,
+        ext_delta = self._fold_external(
+            self.remaining_graph, keep_local, newly_mask_local, plan.dstats
         )
         new_graph, keep_ids = induced_subgraph(
             self.remaining_graph, keep_local,
@@ -900,16 +998,17 @@ class _PartPipeline:
         self.remaining_graph = new_graph
         self.preprocess_time_s += time.time() - t0
         report.divide_transient_bytes = plan.dstats.peak_transient_bytes
-        return None
 
     def _merge_rest(self, plan: PartPlan, res, density: float,
-                    start_sweep: int) -> None:
+                    start_sweep: int, annotate=None) -> None:
         state = self.state
         state.coreness[state.remaining_ids] = res.coreness
         state.finalized[state.remaining_ids] = True
         report = self._report_for(
             plan, res, density, start_sweep, plan.part_g.n_nodes
         )
+        if annotate is not None:
+            annotate(report)  # wave/slice stamps, before the report is saved
         self.parts.append(report)
         state.remaining_ids = np.zeros(0, dtype=np.int64)
         state.ext_remaining = np.zeros(0, dtype=np.int32)
@@ -947,8 +1046,141 @@ class _PartPipeline:
         if self.on_part_done is not None and report is not None:
             self.on_part_done(len(self.parts) - 1, report)
 
+    # ---------------- part-parallel waves ---------------- #
+    def _plan_wave(self, first_plan: PartPlan):
+        """Plan up to ``part_parallel`` consecutive parts by chaining
+        speculative shrinks: part ``i+1`` is planned on the PREDICTED
+        shrink of part ``i`` (every candidate finalizes — the PR 5
+        speculation discipline at depth ``part_parallel`` instead of 1).
+        Returns ``(wave, shrinks)`` with ``shrinks[i]`` the speculative
+        shrink applying after ``wave[i]`` (``None`` for empty parts and
+        for the un-speculated last entry). Main-thread, pure host work."""
+        wave = [first_plan]
+        shrinks: List[Optional[_Prefetch]] = [None]
+        graph, ext = self.remaining_graph, self.state.ext_remaining
+        while len(wave) < self.part_parallel and not wave[-1].is_rest:
+            cur = wave[-1]
+            if not cur.is_empty:
+                pf = self._speculative_shrink(graph, ext, cur.cand_mask,
+                                              cur.cursor)
+                shrinks[-1] = pf
+                graph, ext = pf.shrink_graph, pf.ext_next
+            nxt = self._plan_on(graph, ext, cur.cursor + 1, speculative=True)
+            if nxt is None:
+                break  # predicted shrink emptied the graph — no rest part
+            wave.append(nxt)
+            shrinks.append(None)
+        for p in wave:
+            self._bucketize(p)
+        return wave, shrinks
+
+    def _run_wave(self, wave: List[PartPlan],
+                  shrinks: List[Optional[_Prefetch]]) -> Optional[PartPlan]:
+        """Conquer one wave across the mesh slices, then merge strictly in
+        plan order. Returns the next wave's first plan (``None`` = done).
+
+        The LPT schedule places each non-empty part on a slice by its
+        modeled cost; every slice conquers its parts concurrently on its
+        own worker thread; only the lead part (the one the last boundary
+        checkpoint points at) consults/writes sweep snapshots. The merge
+        loop then validates each speculation in plan order — on a hit the
+        predicted shrink is adopted (byte-identical to the sequential
+        fold), on a miss the sync fold runs and every later speculative
+        conquer of the wave is discarded, exactly as the sequential loop
+        would have recomputed them."""
+        from repro.core.partsched import assign_parts, conquer_wave, cost_for_plan
+
+        state = self.state
+        live = [p for p in wave if not p.is_empty]
+        costs = [
+            cost_for_plan(p.bg, p.cursor, self.slice_specs[0]) for p in live
+        ]
+        schedule = assign_parts(costs, self.slice_specs)
+        # Divide-side accounting for the whole wave, booked on the main
+        # thread before the slice threads start (_conquer(account=False)).
+        self.preprocess_time_s += sum(
+            p.bucketize_time_s + p.extract_time_s for p in wave
+        )
+        lead_cursor = min((p.cursor for p in live), default=None)
+        by_cursor = {p.cursor: p for p in live}
+        assign_of = {a.cursor: a for a in schedule.assignments}
+
+        def run_part(cursor: int, s: int):
+            plan = by_cursor[cursor]
+            fn = (
+                self.slice_decomposes[s]
+                if self.slice_decomposes is not None else None
+            )
+            out = self._conquer(
+                plan, fn=fn, lead=(cursor == lead_cursor), account=False
+            )
+            # Only slice ``s``'s worker writes index ``s`` — no lock needed.
+            self.slice_busy_s[s] += out[0].wall_time_s
+            return out
+
+        t0 = time.time()
+        results = conquer_wave(schedule, run_part)
+        self.conquer_wall_s += time.time() - t0
+
+        for i, plan in enumerate(wave):
+            if plan.is_empty:
+                state.parts_done = plan.cursor + 1
+                self._checkpoint_boundary(None)
+                continue
+            res, density, start_sweep = results[plan.cursor]
+            a = assign_of[plan.cursor]
+
+            def stamp(r, _a=a):
+                r.slice_index = _a.slice_index
+                r.wave = self._wave_index
+                r.modeled_cost_bytes = _a.cost.total
+
+            if plan.is_rest:
+                self._merge_rest(plan, res, density, start_sweep,
+                                 annotate=stamp)
+                return None
+            report, final_local = self._finalize_threshold(
+                plan, res, density, start_sweep
+            )
+            stamp(report)
+            pf = shrinks[i]
+            if pf is not None and bool(final_local.all()):
+                self.prefetch_hits += 1
+                self._adopt_shrink(plan, pf, report)
+                state.parts_done = plan.cursor + 1
+                self._checkpoint_boundary(report)
+                continue
+            # Miss (or the wave's un-speculated tail): fold synchronously,
+            # discard every later speculative conquer of this wave.
+            if pf is not None:
+                self.prefetch_misses += 1
+                self.speculation_discards += sum(
+                    1 for p in wave[i + 1:] if not p.is_empty
+                )
+            self._shrink_sync(plan, final_local, report)
+            state.parts_done = plan.cursor + 1
+            self._checkpoint_boundary(report)
+            if pf is not None and i < len(wave) - 1:
+                return self._build_plan(plan.cursor + 1)
+        return self._build_plan(wave[-1].cursor + 1)
+
+    def run_waves(self) -> None:
+        state = self.state
+        plan = self._build_plan(state.parts_done)
+        while plan is not None:
+            wave, shrinks = self._plan_wave(plan)
+            plan = self._run_wave(wave, shrinks)
+            self._wave_index += 1
+        if not state.complete:
+            # The shrink emptied the graph before the rest part.
+            state.complete = True
+            self._checkpoint_boundary(None)
+
     # ---------------- scheduler ---------------- #
     def run(self) -> None:
+        if self.part_parallel is not None:
+            self.run_waves()
+            return
         state = self.state
         plan = self._build_plan(state.parts_done)
         while plan is not None:
@@ -1021,6 +1253,9 @@ def dc_kcore(
     overlap: bool = False,
     engine: str = "sorted",
     int16: bool = False,
+    part_parallel: Optional[int] = None,
+    part_parallel_plan=None,
+    slice_capacity_bytes: Optional[int] = None,
 ) -> tuple[np.ndarray, DCKCoreReport]:
     """Run DC-kCore. ``thresholds=()`` degenerates to the monolithic baseline
     (= the PSGraph competitor in the paper's tables).
@@ -1083,6 +1318,25 @@ def dc_kcore(
     either way) — the fault-injection tests raise from it to simulate a
     crash at the worst moment (state saved, next part not started).
 
+    ``part_parallel=S`` conquers up to ``S`` consecutive parts CONCURRENTLY
+    per wave: the wave planner chains speculative shrinks (part ``i+1``
+    planned on part ``i``'s predicted shrink — the ``overlap`` speculation
+    at depth ``S``), the partition scheduler
+    (:mod:`repro.core.partsched`) places each part on a slice by its
+    modeled collective+HBM cost, and the merge loop validates the
+    predictions strictly in plan order, discarding the wave's tail on the
+    first miss. Coreness, checkpoints, sweep snapshots and resume are
+    **byte-identical** to the sequential path. Without
+    ``part_parallel_plan`` the slices are worker threads sharing the
+    configured engine (the test backend); with it (a
+    :class:`~repro.core.distributed.MeshPlan`) the global mesh is split
+    into ``S`` submeshes, each part sweeps on its slice through the
+    shard_map engine, and the E(v) boundary folds run device-resident via
+    collectives (``DCKCoreReport.boundary_exchange_bytes``).
+    ``slice_capacity_bytes`` bounds each slice's modeled resident bytes
+    (the scheduler refuses oversized parts). Mutually exclusive with
+    ``overlap`` — the wave subsumes the depth-1 prefetch.
+
     ``sweep_checkpoint_every=k`` (requires ``checkpoint_dir``) additionally
     saves a :class:`SweepSnapshot` every ``k`` conquer sweeps through the
     same atomic path; ``resume=True`` (with the flag still set) then
@@ -1094,6 +1348,41 @@ def dc_kcore(
     (``hook(part_cursor, sweep, save_seconds)``) fires after each snapshot
     save — the mid-sweep fault-injection tests crash from it.
     """
+    slice_decomposes = slice_specs = fold_plan = None
+    if part_parallel is not None:
+        if part_parallel < 1:
+            raise ValueError(f"part_parallel must be >= 1, got {part_parallel}")
+        if overlap:
+            raise ValueError("part_parallel subsumes overlap (the wave IS "
+                             "the speculation) — pass one or the other")
+        if part_parallel_plan is not None:
+            if decompose_fn is not None:
+                raise ValueError("part_parallel_plan builds one distributed "
+                                 "engine per mesh slice — decompose_fn would "
+                                 "be silently ignored")
+            if engine != "sorted" or int16:
+                raise ValueError("part_parallel_plan selects the shard_map "
+                                 "engine; engine=/int16= would be silently "
+                                 "ignored")
+            from repro.core.partsched import make_slice_decomposes, spec_of
+
+            slice_plans, slice_decomposes = make_slice_decomposes(
+                part_parallel_plan, part_parallel
+            )
+            slice_specs = [
+                spec_of(p, i, slice_capacity_bytes)
+                for i, p in enumerate(slice_plans)
+            ]
+            fold_plan = part_parallel_plan
+        else:
+            from repro.core.partsched import SliceSpec
+
+            slice_specs = [
+                SliceSpec(i, 1, 1, slice_capacity_bytes)
+                for i in range(part_parallel)
+            ]
+    elif part_parallel_plan is not None:
+        raise ValueError("part_parallel_plan requires part_parallel")
     if decompose_fn is None:
         decompose_fn = (  # noqa: E731
             lambda bg, **kw: decompose(bg, op=engine, int16=int16, **kw)
@@ -1151,6 +1440,7 @@ def dc_kcore(
                 preprocess_time_s=0.0,
                 resumed_parts=resumed_parts,
                 overlap=overlap,
+                part_parallel=part_parallel or 0,
             )
             return state.coreness.copy(), report
         # Rebuild the remaining graph from the original + finalized mask.
@@ -1190,6 +1480,10 @@ def dc_kcore(
         pending_snap=pending_snap,
         state_mgr=state_mgr,
         sweeps_mgr=sweeps_mgr,
+        part_parallel=part_parallel,
+        slice_decomposes=slice_decomposes,
+        slice_specs=slice_specs,
+        fold_plan=fold_plan,
     )
     try:
         pipeline.run()
@@ -1209,6 +1503,11 @@ def dc_kcore(
         overlap=overlap,
         prefetch_hits=pipeline.prefetch_hits,
         prefetch_misses=pipeline.prefetch_misses,
+        part_parallel=part_parallel or 0,
+        conquer_wall_s=pipeline.conquer_wall_s,
+        slice_busy_s=list(pipeline.slice_busy_s),
+        speculation_discards=pipeline.speculation_discards,
+        boundary_exchange_bytes=pipeline.boundary_exchange_bytes,
     )
     if not bool((state.coreness >= 0).all()):
         raise MergeIncompleteError(

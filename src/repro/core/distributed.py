@@ -243,26 +243,51 @@ def planned_collective_schedule(
     ns, ms = plan.n_node_shards, plan.n_slot_shards
     nb = len(bucket_rows)
     padded = [math.ceil(r / ns) * ns for r in bucket_rows]
-    total_rows = sum(padded) or 1
     dirty = _dirty_psum_bytes(nb, ns * ms) if frontier else 0
-    out: List[int] = []
+    return [
+        sum(_ring_bucket_bytes(padded[bi], ns, ms, cand, wire_bytes,
+                               include_ids=True) for bi in live)
+        + dirty
+        for live in planned_live_sets(padded, n_iters=n_iters,
+                                      full_sweeps=full_sweeps, decay=decay,
+                                      frontier=frontier)
+    ]
+
+
+def planned_live_sets(
+    padded_rows: Sequence[int],
+    *,
+    n_iters: int = 30,
+    full_sweeps: int = 3,
+    decay: float = 0.6,
+    frontier: bool = True,
+) -> List[List[int]]:
+    """The planned frontier schedule itself: live bucket indices per sweep.
+
+    This is the live-set rule :func:`planned_collective_schedule` prices —
+    extracted so other cost models (the part-parallel scheduler's HBM
+    term in ``repro.core.partsched``) price the *same* schedule. The first
+    ``full_sweeps`` iterations keep every bucket live; afterwards the live
+    row budget decays geometrically by ``decay`` and is filled from the
+    LAST buckets of the list downward (densest degree classes converge
+    last on power-law graphs). ``padded_rows`` must already carry the
+    node-shard padding.
+    """
+    nb = len(padded_rows)
+    total_rows = sum(padded_rows) or 1
+    out: List[List[int]] = []
     for it in range(n_iters):
         if not frontier or it < full_sweeps:
-            live = range(nb)
+            live = list(range(nb))
         else:
             budget = total_rows * (decay ** (it - full_sweeps + 1))
-            live_list, acc = [], 0
+            live, acc = [], 0
             for bi in range(nb - 1, -1, -1):  # densest classes stay live
-                live_list.append(bi)
-                acc += padded[bi]
+                live.append(bi)
+                acc += padded_rows[bi]
                 if acc >= budget:
                     break
-            live = live_list
-        out.append(
-            sum(_ring_bucket_bytes(padded[bi], ns, ms, cand, wire_bytes,
-                                   include_ids=True) for bi in live)
-            + dirty
-        )
+        out.append(live)
     return out
 
 
@@ -526,3 +551,104 @@ def decompose_distributed(
 def make_distributed_decompose(plan: MeshPlan, **kw):
     """Adapter: DecomposeFn for :func:`repro.core.dckcore.dc_kcore`."""
     return partial(decompose_distributed, plan=plan, **kw)
+
+
+def device_external_info(
+    g,
+    keep_mask: np.ndarray,
+    upper_mask: np.ndarray,
+    plan: MeshPlan,
+    chunk_slots: Optional[int] = None,
+    stats=None,
+) -> Tuple[np.ndarray, int]:
+    """Device-resident E(v) boundary fold: :func:`repro.graph.build.
+    external_info` computed on the mesh, plus the collective bytes it moved.
+
+    This is the Montresor message discipline at the part boundary — when a
+    part finalizes, the only information its neighbors need is *how many*
+    of their neighbors now sit in the finalized upper set, i.e. the E(v)
+    increment. The host pipeline folds that with a chunked numpy pass;
+    in part-parallel mode the mesh is already holding the graph's working
+    set, so each adjacency chunk's slots are sharded over every mesh axis,
+    each device counts the contributions of its local slots, and one
+    [rows] psum per chunk unions the partial counts — the boundary
+    exchange is a collective, never a host round-trip.
+
+    Bit-exactness contract (differentially tested): the returned vector
+    equals the host pass at every ``chunk_slots``, because integer
+    bincounts are associative across any slot partition; and when
+    ``stats`` is given, the bookkeeping numbers mirror the host pass's
+    arithmetic exactly (same transient model, priced from the same shapes)
+    so checkpointed divide stats cannot reveal which fold ran.
+
+    Returns ``(ext, bytes_moved)``: E(v) per surviving node in
+    ``keep_mask`` order, and the per-device ICI bytes of the psums (a
+    ``2 (k-1)/k`` ring over the ``k``-device mesh; 0 when ``k == 1``).
+    """
+    from repro.graph.build import _iter_adjacency_chunks, _resolve_chunk_slots
+
+    keep_mask = np.asarray(keep_mask, dtype=bool)
+    upper_mask = np.asarray(upper_mask, dtype=bool)
+    n = g.n_nodes
+    mesh = plan.mesh
+    k = int(mesh.size)
+    all_axes = tuple(plan.node_axes) + tuple(plan.slot_axes)
+    rep_sh = NamedSharding(mesh, P())
+    slot_sh = NamedSharding(mesh, P(all_axes if all_axes else None))
+    # Sentinel-padded masks: pad slots point src at a real row (their
+    # contribution is masked off by upper_pad[n] = False on the cols side).
+    keep_dev = jax.device_put(jnp.asarray(keep_mask), rep_sh)
+    upper_dev = jax.device_put(
+        jnp.asarray(np.concatenate([upper_mask, [False]])), rep_sh
+    )
+
+    @partial(jax.jit, static_argnames=("lo", "rows"))
+    def fold_chunk(src_dev, cols_dev, keep, upper, *, lo: int, rows: int):
+        def body(src_loc, cols_loc, keep, upper):
+            contributes = keep[src_loc] & upper[cols_loc]
+            part = jnp.zeros((rows,), jnp.int32).at[src_loc - lo].add(
+                contributes.astype(jnp.int32)
+            )
+            if k > 1:
+                part = jax.lax.psum(part, all_axes)
+            return part
+
+        return compat_shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(all_axes), P(all_axes), P(), P()),
+            out_specs=P(),
+            check_vma=False,
+        )(src_dev, cols_dev, keep, upper)
+
+    ext_full = np.zeros(n, dtype=np.int64)
+    budget = _resolve_chunk_slots(chunk_slots)
+    # Host-pass transient model, mirrored term for term (see the
+    # bit-exactness contract above): persistent = masks + accumulator,
+    # per-chunk = int64 src + 2x bool slot masks.
+    persistent = keep_mask.nbytes + upper_mask.nbytes + ext_full.nbytes
+    contributed = 0
+    bytes_moved = 0
+    for lo, hi, src, cols in _iter_adjacency_chunks(g, budget):
+        src_pad = _pad_to(src.astype(np.int32), k, 0, lo)
+        cols_pad = _pad_to(np.asarray(cols, dtype=np.int32), k, 0, n)
+        part = fold_chunk(
+            jax.device_put(src_pad, slot_sh),
+            jax.device_put(cols_pad, slot_sh),
+            keep_dev,
+            upper_dev,
+            lo=int(lo),
+            rows=int(hi - lo),
+        )
+        ext_full[lo:hi] = np.asarray(part)
+        if k > 1:
+            bytes_moved += int(2 * (k - 1) / k * (hi - lo) * 4)
+        if stats is not None:
+            stats.n_chunks += 1
+            stats.input_slots += int(src.size)
+            contributed += int(ext_full[lo:hi].sum())
+            stats.bump(persistent + src.nbytes + src.size * 2)
+    if stats is not None:
+        stats.kept_slots += contributed
+        stats.note_pass(2 * g.n_edges, contributed, slot_bytes=9, kept_bytes=8)
+    return ext_full[keep_mask].astype(np.int32), bytes_moved

@@ -1,0 +1,385 @@
+"""Partition-level scheduler: conquer many planned parts concurrently.
+
+The sequential DC-kCore loop (``repro.core.dckcore``) conquers one part at
+a time, so a mesh bigger than one part's sweep can saturate sits idle —
+the opposite of the paper's 136B-edge story, where *many* parts are in
+flight across the cluster at once. This module closes that gap in three
+layers, kept separate so the planning layer is pure numpy/ints and can be
+property-tested without a single device:
+
+* **Slices** — the global device mesh is split into ``n_slices``
+  equal submeshes along its first node axis (:func:`slice_mesh_plans`).
+  Each slice is a full :class:`~repro.core.distributed.MeshPlan` of its
+  own, so the existing shard_map engine runs on it unchanged. The pure
+  description of a slice is a :class:`SliceSpec` (shard counts + optional
+  per-device capacity), which duck-types the ``plan`` argument of
+  :func:`~repro.core.distributed.planned_collective_schedule` — the
+  scheduler's cost model and the dry-run's feasibility tables are the
+  same formula by construction.
+
+* **Cost model + assignment** — a part's modeled conquer cost
+  (:func:`part_cost`) prices the planned frontier schedule over the
+  part's bucket shapes on a given slice: the collective term is exactly
+  ``sum(planned_collective_schedule(...))`` (the model PR 7 pinned
+  byte-for-byte against a measured ``frontier=False`` run), and the HBM
+  term prices each planned live set with
+  :func:`repro.roofline.kcore_model.sweep_cost` so single-device slices
+  (which issue no collectives) still get a nonzero, size-ordered cost.
+  :func:`assign_parts` places parts on slices with the classic
+  longest-processing-time greedy: parts descending by modeled cost, each
+  onto the least-loaded slice whose capacity admits the part's modeled
+  per-device resident bytes. Assignment is deterministic (ties break on
+  cursor, then slice index) and total — a part that fits no slice raises
+  :class:`SliceCapacityError` rather than silently over-packing.
+
+* **Wave executor** — :func:`conquer_wave` runs one planned wave: one
+  worker thread per slice (named ``dckcore-conquer-*`` for the test
+  suite's leak gate), each conquering its assigned parts in plan-cursor
+  order. Slices share no mutable state; a slice failure is re-raised in
+  the caller after every slice has drained (the earliest-cursor failure
+  wins, deterministically). Within a single process the "slices" are
+  disjoint device subsets of one mesh; across processes each host runs
+  the same schedule restricted to its own slice (see
+  ``launch.mesh.init_multiprocess``).
+
+How concurrency stays byte-identical to the sequential path: the wave
+planner in ``dckcore`` extends the PR 5 speculation discipline from depth
+1 to depth ``n_slices`` — part ``i+1`` is planned on the *predicted*
+shrink of part ``i`` (every candidate finalizes: exact by construction
+for Exact-Divide, a bet for Rough), and after the wave the predictions
+are validated **in plan order**; the first miss discards every later
+part's speculative result and the pipeline recomputes from there, exactly
+as the sequential loop would. Merges, checkpoints and sweep snapshots
+therefore happen in plan order with the same contents as the sequential
+run — see ``dckcore`` for the merge/checkpoint ordering contract.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.distributed import (
+    MeshPlan,
+    make_distributed_decompose,
+    planned_collective_schedule,
+    planned_live_sets,
+)
+from repro.core.hindex import hindex_of_sequence
+from repro.roofline.kcore_model import sweep_cost
+
+# Wave-conquer worker threads carry this name prefix; the test suite
+# asserts none outlive a test (a leaked thread = a missing drain).
+CONQUER_THREAD_PREFIX = "dckcore-conquer"
+
+
+class SliceCapacityError(ValueError):
+    """A part's modeled resident bytes fit no slice's capacity.
+
+    Raised by :func:`assign_parts` instead of over-packing a slice — the
+    caller (or the user, via a bigger ``--budget-gb`` divide) must plan
+    smaller parts; a silently overflowing assignment would just OOM later
+    with a worse error.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceSpec:
+    """Pure description of one mesh slice — the planning-layer unit.
+
+    Duck-compatible with the ``plan`` argument of
+    :func:`~repro.core.distributed.planned_collective_schedule` /
+    :func:`~repro.core.distributed.sweep_collective_bytes` (both only read
+    ``n_node_shards`` / ``n_slot_shards``), so the scheduler prices parts
+    with the exact formula the dry-run tables and the measured-counter
+    pinning tests use. ``capacity_bytes`` is the per-device resident
+    budget (``None`` = unbounded, the test default).
+    """
+
+    index: int
+    n_node_shards: int
+    n_slot_shards: int
+    capacity_bytes: Optional[int] = None
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_node_shards * self.n_slot_shards
+
+
+@dataclasses.dataclass(frozen=True)
+class PartCost:
+    """Modeled cost of conquering one planned part on a slice.
+
+    ``collective_bytes`` is ``sum(planned_collective_schedule(...))`` over
+    the part's bucket rows — zero on single-device slices. ``hbm_bytes``
+    prices the same planned live sets' HBM traffic per device
+    (:func:`~repro.roofline.kcore_model.sweep_cost` over the live bucket
+    shapes, divided by the slice's device count), so cost stays nonzero
+    and size-ordered even when no collective is ever issued.
+    ``part_bytes`` is the modeled per-device *resident* footprint
+    (sharded tiles + replicated coreness/ext/node-tile state) — the
+    quantity checked against :attr:`SliceSpec.capacity_bytes`.
+    """
+
+    cursor: int
+    collective_bytes: int
+    hbm_bytes: int
+    part_bytes: int
+
+    @property
+    def total(self) -> int:
+        return self.collective_bytes + self.hbm_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    cursor: int
+    slice_index: int
+    cost: PartCost
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveSchedule:
+    """One wave's part -> slice placement, in plan (cursor) order."""
+
+    assignments: List[Assignment]
+    n_slices: int
+
+    def parts_for(self, slice_index: int) -> List[int]:
+        """Cursors assigned to ``slice_index``, ascending (execution order)."""
+        return sorted(
+            a.cursor for a in self.assignments if a.slice_index == slice_index
+        )
+
+    def slice_loads(self) -> List[int]:
+        """Total modeled cost per slice (the LPT objective)."""
+        loads = [0] * self.n_slices
+        for a in self.assignments:
+            loads[a.slice_index] += a.cost.total
+        return loads
+
+    def decisions(self) -> List[dict]:
+        """JSON-friendly schedule decisions (dry-run / report plumbing)."""
+        return [
+            {
+                "cursor": a.cursor,
+                "slice": a.slice_index,
+                "modeled_collective_bytes": a.cost.collective_bytes,
+                "modeled_hbm_bytes": a.cost.hbm_bytes,
+                "modeled_part_bytes": a.cost.part_bytes,
+            }
+            for a in self.assignments
+        ]
+
+
+def cost_inputs_of(bg) -> tuple:
+    """``(bucket_shapes, cand, n_nodes)`` of a bucketized part — what
+    :func:`part_cost` needs, extracted once per plan."""
+    shapes = [(int(b.n_rows), int(b.width)) for b in bg.buckets]
+    cand = max(1, hindex_of_sequence(bg.degrees.astype(np.int64) + bg.ext))
+    return shapes, cand, int(bg.n_nodes)
+
+
+def part_cost(
+    bucket_shapes: Sequence[Sequence[int]],
+    cand: int,
+    n_nodes: int,
+    spec: SliceSpec,
+    *,
+    wire_bytes: int = 4,
+    n_iters: int = 30,
+    full_sweeps: int = 3,
+    decay: float = 0.6,
+    frontier: bool = True,
+) -> PartCost:
+    """Model one part's conquer cost on ``spec`` from its bucket shapes.
+
+    The planned frontier schedule (``full_sweeps`` full iterations, then
+    geometric decay concentrated in the densest classes — identical knobs
+    and live sets to :func:`planned_collective_schedule`) prices both
+    terms, so the collective term of a ``frontier=False`` cost is pinned
+    byte-for-byte against a measured run by the same test that pins the
+    dry-run tables.
+    """
+    rows = [int(r) for r, _w in bucket_shapes]
+    ns = max(1, spec.n_node_shards)
+    padded = [math.ceil(r / ns) * ns for r in rows]
+    coll = sum(
+        planned_collective_schedule(
+            rows, spec, cand, wire_bytes=wire_bytes, n_iters=n_iters,
+            full_sweeps=full_sweeps, decay=decay, frontier=frontier,
+        )
+    ) if spec.n_devices > 1 else 0
+    hbm = 0
+    for live in planned_live_sets(
+        padded, n_iters=n_iters, full_sweeps=full_sweeps, decay=decay,
+        frontier=frontier,
+    ):
+        b, _f = sweep_cost(
+            [(padded[bi], bucket_shapes[bi][1]) for bi in live],
+            cand, wire_bytes=wire_bytes, fused=False, track_dirty=frontier,
+        )
+        hbm += b // spec.n_devices
+    # Per-device resident footprint: sharded tiles + replicated state
+    # (coreness wire + int32 ext + int16 node->bucket map) — the same
+    # memory model as the dry-run feasibility tables.
+    tile_bytes = sum(pr * max(1, w) * 4 for pr, (_r, w) in zip(padded, bucket_shapes))
+    part_bytes = tile_bytes // spec.n_devices + (n_nodes + 1) * (wire_bytes + 4 + 2)
+    return PartCost(
+        cursor=-1,
+        collective_bytes=int(coll),
+        hbm_bytes=int(hbm),
+        part_bytes=int(part_bytes),
+    )
+
+
+def cost_for_plan(bg, cursor: int, spec: SliceSpec, **kw) -> PartCost:
+    """:func:`part_cost` of a bucketized part, stamped with its cursor."""
+    shapes, cand, n = cost_inputs_of(bg)
+    c = part_cost(shapes, cand, n, spec, **kw)
+    return dataclasses.replace(c, cursor=cursor)
+
+
+def assign_parts(
+    costs: Sequence[PartCost], slices: Sequence[SliceSpec]
+) -> WaveSchedule:
+    """Place parts on slices: longest-processing-time greedy.
+
+    Parts are taken descending by modeled total cost (ties ascending by
+    cursor — deterministic), each placed on the least-loaded slice whose
+    ``capacity_bytes`` admits the part's modeled resident footprint (ties
+    ascending by slice index). Handles every shape the wave planner can
+    emit: no parts (empty schedule), one part, more parts than slices
+    (slices queue, executing their parts in cursor order), more slices
+    than parts (trailing slices idle).
+    """
+    if not slices:
+        raise ValueError("assign_parts needs at least one slice")
+    if len({s.index for s in slices}) != len(slices):
+        raise ValueError("duplicate slice indices")
+    order = sorted(costs, key=lambda c: (-c.total, c.cursor))
+    loads: Dict[int, int] = {s.index: 0 for s in slices}
+    out: List[Assignment] = []
+    for c in order:
+        fits = [
+            s for s in slices
+            if s.capacity_bytes is None or c.part_bytes <= s.capacity_bytes
+        ]
+        if not fits:
+            raise SliceCapacityError(
+                f"part cursor={c.cursor} needs {c.part_bytes} resident "
+                f"bytes/device but no slice admits it (capacities: "
+                f"{[s.capacity_bytes for s in slices]}) — plan smaller parts"
+            )
+        best = min(fits, key=lambda s: (loads[s.index], s.index))
+        loads[best.index] += c.total
+        out.append(Assignment(cursor=c.cursor, slice_index=best.index, cost=c))
+    out.sort(key=lambda a: a.cursor)
+    return WaveSchedule(assignments=out, n_slices=len(slices))
+
+
+# --------------------------------------------------------------------- #
+# Mesh layer: real slices of a real mesh.
+# --------------------------------------------------------------------- #
+def slice_mesh_plans(plan: MeshPlan, n_slices: int) -> List[MeshPlan]:
+    """Split ``plan``'s mesh into ``n_slices`` equal submeshes.
+
+    The split runs along the FIRST node axis (parts shard rows over node
+    axes, so shrinking that axis keeps every slice a valid layout for the
+    unchanged shard_map engine); its size must be divisible by
+    ``n_slices``. Each slice keeps the global axis names, so
+    ``MeshPlan(node_axes=..., slot_axes=...)`` carries over verbatim.
+    """
+    from jax.sharding import Mesh
+
+    if n_slices < 1:
+        raise ValueError(f"n_slices must be >= 1, got {n_slices}")
+    if not plan.node_axes:
+        raise ValueError("cannot slice a plan with no node axes")
+    axis = plan.node_axes[0]
+    names = tuple(plan.mesh.axis_names)
+    size = plan.mesh.shape[axis]
+    if size % n_slices != 0:
+        raise ValueError(
+            f"node axis {axis!r} has {size} shards — not divisible into "
+            f"{n_slices} slices; pick a slice count dividing the axis"
+        )
+    pos = names.index(axis)
+    devs = np.asarray(plan.mesh.devices)
+    out = []
+    for block in np.split(devs, n_slices, axis=pos):
+        out.append(
+            MeshPlan(
+                mesh=Mesh(block, names),
+                node_axes=plan.node_axes,
+                slot_axes=plan.slot_axes,
+            )
+        )
+    return out
+
+
+def spec_of(plan: MeshPlan, index: int,
+            capacity_bytes: Optional[int] = None) -> SliceSpec:
+    """The pure :class:`SliceSpec` of a concrete slice plan."""
+    return SliceSpec(
+        index=index,
+        n_node_shards=plan.n_node_shards,
+        n_slot_shards=plan.n_slot_shards,
+        capacity_bytes=capacity_bytes,
+    )
+
+
+def make_slice_decomposes(plan: MeshPlan, n_slices: int, **kw):
+    """``(slice_plans, decompose_fns)`` for part-parallel ``dc_kcore``:
+    one :func:`~repro.core.distributed.make_distributed_decompose` per
+    slice of ``plan``, all sharing the engine kwargs (``wire_dtype``,
+    ``use_kernel``, ``frontier``, ...)."""
+    plans = slice_mesh_plans(plan, n_slices)
+    return plans, [make_distributed_decompose(p, **kw) for p in plans]
+
+
+# --------------------------------------------------------------------- #
+# Wave executor.
+# --------------------------------------------------------------------- #
+def conquer_wave(
+    schedule: WaveSchedule,
+    run_part: Callable[[int, int], object],
+) -> Dict[int, object]:
+    """Run one wave: each slice conquers its assigned parts concurrently.
+
+    ``run_part(cursor, slice_index)`` conquers one part and returns its
+    result; each slice's parts run in ascending cursor order on that
+    slice's worker thread. Every slice drains before this returns — on
+    failure the earliest-cursor slice's exception is re-raised (the others
+    are suppressed deterministically), and no worker thread outlives the
+    call either way.
+    """
+    results: Dict[int, object] = {}
+    failures: List[tuple] = []  # (first cursor of the slice, exception)
+
+    def run_slice(s: int) -> None:
+        cursors = schedule.parts_for(s)
+        for cur in cursors:
+            try:
+                results[cur] = run_part(cur, s)
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                failures.append((cur, e))
+                return
+
+    pool = concurrent.futures.ThreadPoolExecutor(
+        max_workers=max(1, schedule.n_slices),
+        thread_name_prefix=CONQUER_THREAD_PREFIX,
+    )
+    try:
+        futs = [pool.submit(run_slice, s) for s in range(schedule.n_slices)]
+        for f in futs:
+            f.result()
+    finally:
+        pool.shutdown(wait=True)
+    if failures:
+        failures.sort(key=lambda f: f[0])
+        raise failures[0][1]
+    return results

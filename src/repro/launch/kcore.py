@@ -147,6 +147,18 @@ def main():
                          "divide on a worker thread and make checkpoint "
                          "saves async while the current part sweeps "
                          "(byte-identical coreness either way)")
+    ap.add_argument("--part-parallel", type=int, default=None, metavar="S",
+                    help="conquer up to S parts concurrently per wave "
+                         "(speculative shrink chain, validated in plan "
+                         "order; byte-identical coreness). Without "
+                         "--devices the slices are worker threads sharing "
+                         "--engine")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N virtual host devices and run the "
+                         "shard_map engine over a data x model mesh split "
+                         "into --part-parallel slices, with device-resident "
+                         "E(v) boundary exchange (requires --part-parallel; "
+                         "N must be divisible by S)")
     ap.add_argument("--check", action="store_true", help="verify vs BZ peeling")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -156,6 +168,30 @@ def main():
         ap.error("--sweep-checkpoint-every requires --checkpoint-dir")
     if args.int16 and args.engine != "fused":
         ap.error("--int16 requires --engine fused")
+    if args.devices is not None and args.part_parallel is None:
+        ap.error("--devices requires --part-parallel")
+    if args.part_parallel is not None and args.overlap:
+        ap.error("--part-parallel subsumes --overlap (the wave IS the "
+                 "speculation) — pass one or the other")
+    if args.devices is not None and args.engine != "sorted":
+        ap.error("--devices selects the shard_map engine; drop --engine")
+
+    part_parallel_plan = None
+    if args.devices is not None:
+        # Flag edit must precede the first backend query; every import so
+        # far touches only numpy/argparse, so the backend is still cold.
+        from repro.launch.mesh import (
+            force_host_device_count,
+            make_mesh_plan_for_devices,
+        )
+
+        force_host_device_count(args.devices)
+        # Slot-shard over "model" when the "data" axis still divides into
+        # --part-parallel slices afterwards; otherwise keep the mesh flat.
+        mp = 2 if args.devices % (2 * args.part_parallel) == 0 else 1
+        part_parallel_plan = make_mesh_plan_for_devices(
+            args.devices, model_parallel=mp
+        )
 
     t0 = time.time()
     g, ingest = load_graph(args.graph, args.seed, edge_chunk=args.edge_chunk)
@@ -184,7 +220,9 @@ def main():
                             divide_chunk=args.divide_chunk,
                             sweep_checkpoint_every=args.sweep_checkpoint_every,
                             overlap=args.overlap,
-                            engine=args.engine, int16=args.int16)
+                            engine=args.engine, int16=args.int16,
+                            part_parallel=args.part_parallel,
+                            part_parallel_plan=part_parallel_plan)
     print(f"\nDC-kCore done in {report.total_time_s:.2f}s "
           f"(preprocess {report.preprocess_time_s:.2f}s, engine={args.engine}"
           f"{'+int16' if args.int16 else ''}, reorder={args.reorder}, "
@@ -195,6 +233,14 @@ def main():
     if report.overlap:
         print(f"prefetch: {report.prefetch_hits} hit(s), "
               f"{report.prefetch_misses} miss(es) recomputed")
+    if report.part_parallel:
+        util = "/".join(f"{u:.2f}" for u in report.slice_utilization)
+        print(f"part-parallel: {report.part_parallel} slice(s), wave wall "
+              f"{report.conquer_wall_s:.2f}s, slice utilization [{util}], "
+              f"{report.prefetch_hits} speculation hit(s), "
+              f"{report.prefetch_misses} miss(es), "
+              f"{report.speculation_discards} conquer(s) discarded, "
+              f"boundary-exchange bytes = {report.boundary_exchange_bytes:,}")
     if report.resumed_parts:
         print(f"resumed: {report.resumed_parts} part(s) restored from "
               f"{args.checkpoint_dir}, not re-run")
@@ -222,6 +268,9 @@ def main():
               f"divide_peak={p.divide_transient_bytes/2**20:.2f}MiB "
               f"save_s={p.save_time_s:.3f} save_wall_s={p.save_wall_s:.3f} "
               f"finalized={p.finalized:,}"
+              + (f" slice={p.slice_index} wave={p.wave} "
+                 f"modeled={p.modeled_cost_bytes:,}B"
+                 if p.slice_index >= 0 else "")
               + (" [prefetched]" if p.prefetched else ""))
     if args.check:
         t0 = time.time()

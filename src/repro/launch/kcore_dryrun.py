@@ -19,6 +19,7 @@ Usage:
     python -m repro.launch.kcore_dryrun [--wire int16] [--cand 2048]
 """
 import argparse
+import dataclasses
 import json
 import math
 import time
@@ -254,6 +255,68 @@ def run_split3(name, n, m, t, kmax, wire, tag=""):
                  wire, multi_pod=True, tag=tag)
 
 
+def run_slices(name, n, m, t, kmax, wire, n_slices, tag=""):
+    """Part-parallel schedule table: price the 3-part split's parts with
+    the production scheduler (``part_cost`` + ``assign_parts``) on the
+    single-pod 16x16 mesh divided into ``n_slices`` slices along "data".
+    Pure planning-layer math — no devices are touched, so this prints the
+    same placement the live part-parallel engine would compute."""
+    from repro.core.partsched import SliceSpec, assign_parts, part_cost
+
+    node_shards, slot_shards = 16, 16
+    if node_shards % n_slices != 0:
+        raise SystemExit(f"--slices must divide the {node_shards}-way node axis")
+    specs = [
+        SliceSpec(index=i, n_node_shards=node_shards // n_slices,
+                  n_slot_shards=slot_shards)
+        for i in range(n_slices)
+    ]
+    wire_bytes = 2 if wire == "int16" else 4
+    _alpha, buckets = powerlaw_bucket_rows(n, m)
+    splits = [
+        (f"top(t={t})", [(w, r) for w, r in buckets if w >= 2 * t],
+         min(2 * kmax, 4096)),
+        (f"mid(8<d<{t})", [(w, r) for w, r in buckets if 8 < w < 2 * t], t),
+        ("bottom(d<=8)", [(w, r) for w, r in buckets if w <= 8], 8),
+    ]
+    costs, labels = [], {}
+    for cursor, (label, part, cand) in enumerate(splits):
+        shapes = [(r, w) for w, r in part]
+        pn = max(sum(r for _w, r in part), 1)
+        c = part_cost(shapes, cand, pn, specs[0], wire_bytes=wire_bytes)
+        costs.append(dataclasses.replace(c, cursor=cursor))
+        labels[cursor] = label
+    sched = assign_parts(costs, specs)
+    loads = sched.slice_loads()
+    peak = max(loads) or 1
+    print(f"\n{name}{tag}: 3-part split on 16x16 / {n_slices} slices "
+          f"({specs[0].n_node_shards}x{specs[0].n_slot_shards} each, wire={wire})")
+    for a in sched.assignments:
+        c = a.cost
+        print(f"  part {a.cursor} {labels[a.cursor]:16s} -> slice {a.slice_index}  "
+              f"coll={c.collective_bytes/2**30:8.2f}GiB  "
+              f"hbm/dev={c.hbm_bytes/2**30:8.2f}GiB  "
+              f"resident/dev={c.part_bytes/2**30:6.2f}GiB")
+    for i, load in enumerate(loads):
+        bar = "#" * int(40 * load / peak)
+        print(f"  slice {i}: modeled {load/2**30:10.2f}GiB  "
+              f"util={load/peak:5.1%}  {bar}")
+    rec = {
+        "case": f"{name}{tag}-slices{n_slices}",
+        "mesh": "16x16",
+        "n_slices": n_slices,
+        "wire": wire,
+        "decisions": [{**d, "label": labels[d["cursor"]]}
+                      for d in sched.decisions()],
+        "slice_loads": loads,
+        "slice_utilization": [load / peak for load in loads],
+    }
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    with open(os.path.join(ARTIFACT_DIR, f"{rec['case']}__16x16.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--wire", choices=["int32", "int16"], default="int32")
@@ -262,10 +325,16 @@ def main():
     ap.add_argument("--case", default=None)
     ap.add_argument("--split3", action="store_true")
     ap.add_argument("--mono-only", action="store_true")
+    ap.add_argument("--slices", type=int, default=None,
+                    help="print the part-parallel schedule table for the "
+                         "3-part split across N mesh slices (planning only)")
     args = ap.parse_args()
 
     for name, (n, m, t, kmax) in WORKLOADS.items():
         if args.case and args.case != name:
+            continue
+        if args.slices:
+            run_slices(name, n, m, t, kmax, args.wire, args.slices, tag=args.tag)
             continue
         if args.split3:
             run_split3(name, n, m, t, kmax, args.wire, tag=args.tag)

@@ -27,3 +27,61 @@ def make_mesh_for_devices(n: int, model_parallel: int = 1, axis_names=("data", "
     """Small helper for tests / examples on N local (virtual) devices."""
     assert n % model_parallel == 0
     return make_mesh((n // model_parallel, model_parallel), axis_names)
+
+
+def make_mesh_plan_for_devices(n: int, model_parallel: int = 1):
+    """A :class:`~repro.core.distributed.MeshPlan` over ``n`` local devices:
+    rows sharded over ``"data"``, neighbor slots over ``"model"`` — the
+    layout the part-parallel scheduler slices along its first node axis."""
+    from repro.core.distributed import MeshPlan
+
+    return MeshPlan(
+        mesh=make_mesh_for_devices(n, model_parallel),
+        node_axes=("data",),
+        slot_axes=("model",),
+    )
+
+
+def force_host_device_count(n: int) -> None:
+    """Make the CPU host expose ``n`` virtual devices (test/emulation
+    backend for part-parallel runs) by rewriting ``XLA_FLAGS``.
+
+    Must run BEFORE jax instantiates a backend — the flag is read once at
+    backend init, so a late call would silently do nothing; this raises
+    instead (via :func:`repro.compat.backends_initialized`). Any previous
+    ``--xla_force_host_platform_device_count`` token is dropped so repeated
+    calls don't accumulate contradictory flags.
+    """
+    import os
+
+    from repro.compat import backends_initialized
+
+    if backends_initialized():
+        raise RuntimeError(
+            "force_host_device_count must be called before jax initializes "
+            "its backends (the flag is read once at backend init)"
+        )
+    kept = [
+        t for t in os.environ.get("XLA_FLAGS", "").split()
+        if not t.startswith("--xla_force_host_platform_device_count")
+    ]
+    kept.append(f"--xla_force_host_platform_device_count={int(n)}")
+    os.environ["XLA_FLAGS"] = " ".join(kept)
+
+
+def init_multiprocess(
+    coordinator_address: str,
+    num_processes: int,
+    process_id: int,
+    local_device_ids=None,
+) -> None:
+    """Join this process to a multi-process jax mesh (one host per mesh
+    slice in the part-parallel deployment story). Thin wrapper over
+    :func:`repro.compat.distributed_initialize` so the version-sensitive
+    call stays in the compat layer; after it returns, ``jax.devices()``
+    spans every process and the global MeshPlan can be built as usual."""
+    from repro.compat import distributed_initialize
+
+    distributed_initialize(
+        coordinator_address, num_processes, process_id, local_device_ids
+    )

@@ -13,7 +13,7 @@ from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
 # Worker threads the pipeline may spin up; every dc_kcore /
 # CheckpointManager exit path must drain them (close()/wait()), so one
 # outliving a test is a leak — equivalent to a missed wait()-on-exit.
-_PIPELINE_THREAD_PREFIXES = ("ckpt-save", "dckcore-prefetch")
+_PIPELINE_THREAD_PREFIXES = ("ckpt-save", "dckcore-prefetch", "dckcore-conquer")
 
 
 @pytest.fixture(autouse=True)
@@ -33,6 +33,26 @@ def no_leaked_pipeline_threads():
         f"leaked pipeline worker threads: {[t.name for t in leaked]} — "
         f"a CheckpointManager.wait() or _PartPipeline.close() is missing"
     )
+
+
+@pytest.fixture
+def worker_harness():
+    """Multi-process test harness (one child interpreter per mesh slice).
+
+    Teardown is a process-leak gate, the subprocess analogue of the thread
+    gate above: a child outliving the test body means a join() is missing
+    (or a multi-process rendezvous deadlocked) — the leaked children are
+    killed and the test fails naming their PIDs."""
+    from distributed_helpers import WorkerHarness
+
+    h = WorkerHarness()
+    yield h
+    pids = h.terminate_leaked()
+    if pids:
+        raise AssertionError(
+            f"leaked worker subprocesses (pids {pids}) — a "
+            f"WorkerHarness.join() is missing or a rendezvous deadlocked"
+        )
 
 
 @pytest.fixture(scope="session")

@@ -1,29 +1,69 @@
-"""Run snippets in a subprocess with N virtual XLA host devices.
+"""Run snippets in subprocesses with N virtual XLA host devices.
 
 The main pytest process must keep a single CPU device (smoke tests / benches
 depend on it), so every multi-device test spawns a fresh interpreter with
-``--xla_force_host_platform_device_count=N``."""
+``--xla_force_host_platform_device_count=N``. Two entry points:
+
+* :func:`run_with_devices` — one blocking child, raise on nonzero exit
+  (the original helper; every call site keeps working unchanged).
+* :class:`WorkerHarness` — spawn several children concurrently (the
+  multi-process part-parallel tests run one child per mesh slice), join
+  them all, and fail with every child's stdout/stderr embedded in the
+  assertion. Children get deterministic seeds (``PYTHONHASHSEED=0``) and
+  their rank/world exported as ``REPRO_RANK`` / ``REPRO_WORLD``.
+
+``preamble(n)`` is the shared import block for child snippets — the same
+text the distributed suite used to inline as ``_COMMON``, parameterized
+by the asserted device count.
+"""
 import os
 import subprocess
 import sys
+from typing import Dict, List, Optional
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
+def preamble(n_devices: int) -> str:
+    """Shared import block for multi-device child snippets: the engine
+    surface under test plus an assertion that the forced device count
+    actually took (a silent 1-device fallback would make every
+    differential test vacuously pass)."""
+    return rf"""
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.core.distributed import MeshPlan, decompose_distributed, make_distributed_decompose, sweep_collective_bytes
+from repro.core.dckcore import dc_kcore
+from repro.graph.build import bucketize
+from repro.graph.generators import rmat, erdos_renyi
+from repro.graph.oracle import peel_coreness
+assert len(jax.devices()) == {int(n_devices)}, jax.devices()
+"""
+
+
+def _child_env(n_devices: int, extra_env: Optional[Dict[str, str]] = None):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={n_devices} "
-        + env.get("XLA_FLAGS", "").replace(
-            next((t for t in env.get("XLA_FLAGS", "").split() if "device_count" in t), ""), ""
-        )
-    ).strip()
-    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    kept = [
+        t for t in env.get("XLA_FLAGS", "").split()
+        if not t.startswith("--xla_force_host_platform_device_count")
+    ]
+    kept.append(f"--xla_force_host_platform_device_count={int(n_devices)}")
+    env["XLA_FLAGS"] = " ".join(kept)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    env["PYTHONHASHSEED"] = "0"
+    if extra_env:
+        env.update({k: str(v) for k, v in extra_env.items()})
+    return env
+
+
+def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
     proc = subprocess.run(
         [sys.executable, "-c", code],
         capture_output=True,
         text=True,
-        env=env,
+        env=_child_env(n_devices),
         timeout=timeout,
         cwd=REPO,
     )
@@ -32,3 +72,98 @@ def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
             f"subprocess failed (rc={proc.returncode})\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
         )
     return proc.stdout
+
+
+class WorkerHarness:
+    """Spawn/join a fleet of child interpreters (one per mesh slice).
+
+    Every spawned child is tracked; :meth:`join` reaps them all and raises
+    one AssertionError embedding each failed child's rank, stdout and
+    stderr (child tracebacks land in stderr, so they surface verbatim in
+    the pytest failure). The ``worker_harness`` fixture calls
+    :meth:`terminate_leaked` on teardown and fails the test if any child
+    outlived the test body — the subprocess analogue of the pipeline
+    thread-leak gate.
+    """
+
+    def __init__(self):
+        self._procs: List[subprocess.Popen] = []
+        self._meta: List[dict] = []
+
+    def run(self, code: str, n_devices: int, timeout: int = 600) -> str:
+        """Blocking single-child convenience — same contract as
+        :func:`run_with_devices`."""
+        return run_with_devices(code, n_devices, timeout=timeout)
+
+    def spawn(
+        self,
+        code: str,
+        n_devices: int,
+        rank: int = 0,
+        world: int = 1,
+        extra_env: Optional[Dict[str, str]] = None,
+    ) -> subprocess.Popen:
+        env = _child_env(
+            n_devices,
+            {"REPRO_RANK": str(rank), "REPRO_WORLD": str(world),
+             **(extra_env or {})},
+        )
+        proc = subprocess.Popen(
+            [sys.executable, "-c", code],
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+            text=True,
+            env=env,
+            cwd=REPO,
+        )
+        self._procs.append(proc)
+        self._meta.append({"rank": rank, "world": world})
+        return proc
+
+    def join(self, timeout: int = 600) -> List[str]:
+        """Reap every spawned child; return their stdouts in spawn order.
+
+        Raises a single AssertionError describing EVERY failed child (a
+        multi-process deadlock usually kills several ranks at once — the
+        first failure alone rarely names the culprit)."""
+        outs, failures = [], []
+        for proc, meta in zip(self._procs, self._meta):
+            try:
+                out, err = proc.communicate(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                out, err = proc.communicate()
+                failures.append(
+                    f"rank {meta['rank']}/{meta['world']}: TIMEOUT after "
+                    f"{timeout}s\nSTDOUT:\n{out}\nSTDERR:\n{err}"
+                )
+                outs.append(out)
+                continue
+            outs.append(out)
+            if proc.returncode != 0:
+                failures.append(
+                    f"rank {meta['rank']}/{meta['world']}: rc={proc.returncode}"
+                    f"\nSTDOUT:\n{out}\nSTDERR:\n{err}"
+                )
+        self._procs, self._meta = [], []
+        if failures:
+            raise AssertionError(
+                f"{len(failures)} worker(s) failed:\n" + "\n---\n".join(failures)
+            )
+        return outs
+
+    def leaked(self) -> List[subprocess.Popen]:
+        return [p for p in self._procs if p.poll() is None]
+
+    def terminate_leaked(self) -> List[int]:
+        """Kill any still-running children; return their PIDs (the fixture
+        turns a nonempty list into a test failure)."""
+        pids = []
+        for p in self.leaked():
+            pids.append(p.pid)
+            p.kill()
+            try:
+                p.communicate(timeout=30)
+            except subprocess.TimeoutExpired:
+                pass
+        return pids

@@ -3,18 +3,9 @@
 Each test runs in a subprocess so the main process keeps 1 CPU device."""
 import pytest
 
-from distributed_helpers import run_with_devices
+from distributed_helpers import preamble, run_with_devices
 
-_COMMON = r"""
-import jax, numpy as np
-import jax.numpy as jnp
-from repro.core.distributed import MeshPlan, decompose_distributed, make_distributed_decompose, sweep_collective_bytes
-from repro.core.dckcore import dc_kcore
-from repro.graph.build import bucketize
-from repro.graph.generators import rmat, erdos_renyi
-from repro.graph.oracle import peel_coreness
-assert len(jax.devices()) == 8, jax.devices()
-"""
+_COMMON = preamble(8)
 
 
 def test_distributed_matches_oracle_2d():
@@ -207,21 +198,39 @@ print("OK", res.collective_bytes, base.collective_bytes)
     assert "OK" in out
 
 
-def test_planned_schedule_pins_measured_bytes():
+@pytest.mark.parametrize(
+    "shape,axes,node_axes",
+    [
+        # The global plans --devices can build, plus every slice shape the
+        # part-parallel scheduler emits from them on 8 devices: slicing
+        # (4,2)/(8,) into 2 slices gives (2,2)/(4,); into 4 gives (1,2)/(2,).
+        # The measured-vs-modeled pin must hold on ALL of them — the
+        # scheduler prices parts per slice with this exact formula.
+        ((4, 2), ("data", "model"), ("data",)),
+        ((8,), ("data",), ("data",)),
+        ((2, 2), ("data", "model"), ("data",)),
+        ((4,), ("data",), ("data",)),
+        ((1, 2), ("data", "model"), ("data",)),
+        ((2,), ("data",), ("data",)),
+    ],
+)
+def test_planned_schedule_pins_measured_bytes(shape, axes, node_axes):
     """The dry-run's planned collective schedule against one measured run:
     on a frontier=False run every sweep is full, the planned schedule is
     exact, and the model must reproduce the live engine's per-iteration
     counter byte for byte. On a frontier run only sweep 0 is guaranteed
     full — the default decayed schedule must pin exactly that iteration,
     and its modeled tail must decay monotonically toward the densest-class
-    floor."""
+    floor. Parametrized over every mesh shape the part-parallel scheduler
+    can emit (global plans and their slices) so the scheduler's cost model
+    stays pinned to the live counters on the exact layouts it prices."""
     out = run_with_devices(
         _COMMON
-        + r"""
+        + rf"""
 from repro.core.distributed import planned_collective_schedule
 from repro.core.hindex import hindex_of_sequence
-mesh = jax.make_mesh((4, 2), ("data", "model"))
-plan = MeshPlan(mesh=mesh, node_axes=("data",), slot_axes=("model",))
+mesh = jax.make_mesh({shape!r}, {axes!r})
+plan = MeshPlan(mesh=mesh, node_axes={node_axes!r}, slot_axes=tuple(a for a in {axes!r} if a == "model"))
 g = rmat(9, 8, seed=2)
 bg = bucketize(g)
 cand = max(1, hindex_of_sequence(bg.degrees.astype(np.int64) + bg.ext))
@@ -244,9 +253,14 @@ assert dflt[0] == res.collective_bytes_per_iter[0], (
 # the geometric decay has concentrated the frontier in the dense classes.
 assert all(a >= b for a, b in zip(dflt, dflt[1:]))
 assert dflt[-1] < dflt[0]
-# int16 wire shrinks every planned iteration (the estimate all_gather term).
+# int16 wire shrinks every planned iteration (the estimate all_gather
+# term) — except on single-node-shard slices, where no estimate is ever
+# gathered over the node axis and the wire dtype must be a no-op.
 d16 = planned_collective_schedule(rows, plan, cand, n_iters=12, wire_bytes=2)
-assert all(a < b for a, b in zip(d16, dflt))
+if plan.n_node_shards > 1:
+    assert all(a < b for a, b in zip(d16, dflt))
+else:
+    assert d16 == dflt
 print("OK")
 """,
         n_devices=8,

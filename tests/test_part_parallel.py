@@ -1,0 +1,616 @@
+"""Part-parallel conquer (``dc_kcore(part_parallel=S)``): scheduler
+properties + the differential suite proving byte-identity to sequential.
+
+Three layers, mirroring the implementation:
+
+* **Scheduler** (pure numpy — runs in-process): :func:`assign_parts` /
+  :func:`part_cost` unit + property tests. Hypothesis drives the property
+  when installed; seeded ports keep the invariants covered either way
+  (same convention as test_divide_chunked.py).
+* **Thread mode** (in-process, single CPU device): slices are worker
+  threads sharing the default engine — coreness, checkpoints and crash
+  recovery must be byte-identical to the sequential loop across engines,
+  reorderings and divide strategies.
+* **Device mode** (subprocess per test, forced host device count): real
+  mesh slices, the device-resident E(v) boundary fold, the modeled-cost
+  pin against measured collective counters, and a two-rank multi-process
+  differential through the :class:`WorkerHarness` fixture.
+
+``REPRO_FORCE_DEVICES`` sets the virtual device count for device-mode
+tests (CI runs the suite at 2 and 4; default 4). It must be even — the
+suite always exercises 2 mesh slices.
+"""
+import hashlib
+import os
+
+import numpy as np
+import pytest
+
+from distributed_helpers import preamble, run_with_devices
+
+from repro.core.dckcore import dc_kcore
+from repro.core.distributed import planned_collective_schedule, planned_live_sets
+from repro.core.partsched import (
+    PartCost,
+    SliceCapacityError,
+    SliceSpec,
+    assign_parts,
+    conquer_wave,
+    part_cost,
+)
+from repro.graph.generators import rmat
+from repro.graph.oracle import peel_coreness
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # seeded ports below keep the invariants covered
+    HAVE_HYPOTHESIS = False
+
+N_DEV = int(os.environ.get("REPRO_FORCE_DEVICES", "4"))
+assert N_DEV % 2 == 0, "REPRO_FORCE_DEVICES must be even (suite uses 2 slices)"
+
+
+# --------------------------------------------------------------------- #
+# Scheduler: unit tests (pure planning layer, no devices).
+# --------------------------------------------------------------------- #
+def _cost(cursor, total, part_bytes=1):
+    return PartCost(cursor=cursor, collective_bytes=total, hbm_bytes=0,
+                    part_bytes=part_bytes)
+
+
+def _slices(n, capacity=None):
+    return [SliceSpec(index=i, n_node_shards=1, n_slot_shards=1,
+                      capacity_bytes=capacity) for i in range(n)]
+
+
+def test_assign_empty_schedule():
+    sched = assign_parts([], _slices(3))
+    assert sched.assignments == []
+    assert sched.slice_loads() == [0, 0, 0]
+    assert all(sched.parts_for(s) == [] for s in range(3))
+
+
+def test_assign_single_part():
+    sched = assign_parts([_cost(0, 100)], _slices(3))
+    assert [a.slice_index for a in sched.assignments] == [0]
+    assert sched.slice_loads() == [100, 0, 0]
+
+
+def test_assign_more_parts_than_slices_queues_in_cursor_order():
+    # 5 equal parts on 2 slices: LPT round-robins, each slice executes its
+    # queue in ascending cursor order.
+    sched = assign_parts([_cost(i, 10) for i in range(5)], _slices(2))
+    assert sorted(sched.parts_for(0) + sched.parts_for(1)) == list(range(5))
+    for s in range(2):
+        q = sched.parts_for(s)
+        assert q == sorted(q)
+    assert sorted(sched.slice_loads()) == [20, 30]
+
+
+def test_assign_lpt_places_big_parts_first():
+    # costs 50, 30, 20 on 2 slices: LPT puts 50 alone, 30+20 together.
+    sched = assign_parts(
+        [_cost(0, 50), _cost(1, 30), _cost(2, 20)], _slices(2)
+    )
+    assert sorted(sched.slice_loads()) == [50, 50]
+    by_cursor = {a.cursor: a.slice_index for a in sched.assignments}
+    assert by_cursor[1] == by_cursor[2] != by_cursor[0]
+
+
+def test_assign_output_in_plan_order():
+    """Merged coreness folds back in plan order — the schedule's
+    assignment list IS that order regardless of cost-sorted placement."""
+    sched = assign_parts([_cost(2, 1), _cost(0, 99), _cost(1, 50)], _slices(2))
+    assert [a.cursor for a in sched.assignments] == [0, 1, 2]
+
+
+def test_assign_capacity_respected_and_total():
+    slices = [
+        SliceSpec(index=0, n_node_shards=1, n_slot_shards=1, capacity_bytes=10),
+        SliceSpec(index=1, n_node_shards=1, n_slot_shards=1, capacity_bytes=100),
+    ]
+    # The big-footprint part must land on slice 1 even though slice 0 is
+    # emptier; the small one then balances onto slice 0.
+    sched = assign_parts(
+        [_cost(0, 5, part_bytes=50), _cost(1, 5, part_bytes=5)], slices
+    )
+    by_cursor = {a.cursor: a.slice_index for a in sched.assignments}
+    assert by_cursor[0] == 1 and by_cursor[1] == 0
+    with pytest.raises(SliceCapacityError):
+        assign_parts([_cost(0, 1, part_bytes=1000)], slices)
+
+
+def test_assign_validates_slices():
+    with pytest.raises(ValueError):
+        assign_parts([_cost(0, 1)], [])
+    with pytest.raises(ValueError):
+        assign_parts([_cost(0, 1)], [
+            SliceSpec(index=0, n_node_shards=1, n_slot_shards=1),
+            SliceSpec(index=0, n_node_shards=1, n_slot_shards=1),
+        ])
+
+
+def test_conquer_wave_runs_all_and_reraises_earliest():
+    sched = assign_parts([_cost(i, 10) for i in range(4)], _slices(2))
+    ran = []
+    out = conquer_wave(sched, lambda cur, s: ran.append((cur, s)) or cur * 2)
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(out[c] == c * 2 for c in out)
+    assert sorted(c for c, _s in ran) == [0, 1, 2, 3]
+
+    class Boom(Exception):
+        pass
+
+    def failing(cur, s):
+        raise Boom(f"part {cur}")
+
+    with pytest.raises(Boom) as ei:
+        conquer_wave(sched, failing)
+    # Deterministic: the earliest-cursor failure wins.
+    assert "part 0" in str(ei.value)
+
+
+# --------------------------------------------------------------------- #
+# Scheduler: properties (hypothesis when available + seeded ports).
+# --------------------------------------------------------------------- #
+def _check_schedule_invariants(costs, n_slices, capacity=None):
+    slices = _slices(n_slices, capacity)
+    if capacity is not None and any(c.part_bytes > capacity for c in costs):
+        with pytest.raises(SliceCapacityError):
+            assign_parts(costs, slices)
+        return
+    sched = assign_parts(costs, slices)
+    # Total: every part exactly once, merged list in plan (cursor) order.
+    assert [a.cursor for a in sched.assignments] == sorted(c.cursor for c in costs)
+    # Capacity respected on every placement.
+    if capacity is not None:
+        assert all(a.cost.part_bytes <= capacity for a in sched.assignments)
+    # Load bookkeeping is conservative (no cost lost or invented).
+    loads = sched.slice_loads()
+    assert sum(loads) == sum(c.total for c in costs)
+    # Uncapacitated LPT guarantee: makespan <= average + one part.
+    if capacity is None and costs:
+        avg = sum(c.total for c in costs) / n_slices
+        assert max(loads) <= avg + max(c.total for c in costs)
+    # Determinism: input order must not matter.
+    shuffled = list(reversed(costs))
+    assert assign_parts(shuffled, slices) == sched
+
+
+def _random_costs(rng, n):
+    return [
+        PartCost(
+            cursor=i,
+            collective_bytes=int(rng.integers(0, 1 << 24)),
+            hbm_bytes=int(rng.integers(0, 1 << 22)),
+            part_bytes=int(rng.integers(1, 1 << 16)),
+        )
+        for i in range(n)
+    ]
+
+
+def test_assign_invariants_seeded():
+    for seed in range(30):
+        rng = np.random.default_rng(seed)
+        n_parts = int(rng.integers(0, 9))
+        n_slices = int(rng.integers(1, 5))
+        cap = None if rng.random() < 0.5 else int(rng.integers(1, 1 << 17))
+        _check_schedule_invariants(_random_costs(rng, n_parts), n_slices, cap)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=60)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_parts=st.integers(0, 12),
+        n_slices=st.integers(1, 6),
+        capacitated=st.booleans(),
+    )
+    def test_assign_invariants_hypothesis(seed, n_parts, n_slices, capacitated):
+        rng = np.random.default_rng(seed)
+        cap = int(rng.integers(1, 1 << 17)) if capacitated else None
+        _check_schedule_invariants(_random_costs(rng, n_parts), n_slices, cap)
+
+
+def test_planned_schedule_edge_cases():
+    """The cost model's planned schedule is total: no buckets, all-empty
+    buckets and single-bucket parts all price without special-casing."""
+    spec4 = SliceSpec(index=0, n_node_shards=2, n_slot_shards=2)
+    assert planned_collective_schedule([], spec4, 8, n_iters=5) == [0] * 5
+    assert planned_live_sets([], n_iters=5) == [[]] * 5
+    # A zero-row bucket contributes nothing; the nonempty one still prices.
+    with_zero = planned_collective_schedule([0, 16], spec4, 8, n_iters=5)
+    only = planned_collective_schedule([16], spec4, 8, n_iters=5)
+    assert all(b > 0 for b in with_zero)
+    # The dirty-bit psum term scales with bucket COUNT, so the two-bucket
+    # layout costs at least the one-bucket one, never less.
+    assert all(a >= b for a, b in zip(with_zero, only))
+
+
+def test_part_cost_single_device_is_collective_free_but_ordered():
+    spec1 = SliceSpec(index=0, n_node_shards=1, n_slot_shards=1)
+    small = part_cost([(16, 8)], 8, 16, spec1)
+    big = part_cost([(64, 8), (16, 32)], 8, 80, spec1)
+    assert small.collective_bytes == big.collective_bytes == 0
+    # HBM term keeps costs nonzero and size-ordered on 1-device slices.
+    assert 0 < small.total < big.total
+    assert small.part_bytes < big.part_bytes
+
+
+# --------------------------------------------------------------------- #
+# Thread mode: differential against the sequential loop (in-process).
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine,int16", [("sorted", False), ("fused", False),
+                                          ("fused", True), ("count", False)])
+@pytest.mark.parametrize("strategy", ["rough", "exact"])
+def test_thread_mode_matches_sequential(engine, int16, strategy):
+    g = rmat(10, 8, seed=11)
+    seq_core, seq_rep = dc_kcore(g, thresholds=(4, 10), strategy=strategy,
+                                 engine=engine, int16=int16)
+    par_core, par_rep = dc_kcore(g, thresholds=(4, 10), strategy=strategy,
+                                 engine=engine, int16=int16, part_parallel=2)
+    np.testing.assert_array_equal(par_core, seq_core)
+    np.testing.assert_array_equal(par_core, peel_coreness(g))
+    assert par_rep.part_parallel == 2
+    assert len(par_rep.slice_busy_s) == 2
+    assert [p.name for p in par_rep.parts] == [p.name for p in seq_rep.parts]
+    # Every conquered part carries its placement stamp.
+    assert all(p.slice_index >= 0 and p.wave >= 0 for p in par_rep.parts)
+    if strategy == "exact":
+        # Exact-Divide speculation is exact by construction: the wave chain
+        # never mispredicts, so nothing is ever discarded.
+        assert par_rep.speculation_discards == 0
+        assert par_rep.prefetch_misses == 0
+
+
+@pytest.mark.parametrize("reorder", ["rcm", "bfs"])
+def test_thread_mode_with_reorder(reorder):
+    g = rmat(10, 8, seed=3)
+    seq_core, _ = dc_kcore(g, thresholds=(4, 10), reorder=reorder)
+    par_core, _ = dc_kcore(g, thresholds=(4, 10), reorder=reorder,
+                           part_parallel=2)
+    np.testing.assert_array_equal(par_core, seq_core)
+    np.testing.assert_array_equal(par_core, peel_coreness(g))
+
+
+def test_thread_mode_matches_overlap_pipeline():
+    """Three ways to run the same decomposition — sequential, overlapped
+    (PR 6) and part-parallel — one answer."""
+    g = rmat(10, 8, seed=7)
+    seq, _ = dc_kcore(g, thresholds=(4, 10, 20))
+    ovl, _ = dc_kcore(g, thresholds=(4, 10, 20), overlap=True)
+    par, _ = dc_kcore(g, thresholds=(4, 10, 20), part_parallel=3)
+    np.testing.assert_array_equal(seq, ovl)
+    np.testing.assert_array_equal(seq, par)
+
+
+def test_thread_mode_monolithic_and_many_slices():
+    g = rmat(10, 8, seed=5)
+    # Monolithic (no thresholds): one part, extra slices idle.
+    seq, _ = dc_kcore(g, thresholds=())
+    par, rep = dc_kcore(g, thresholds=(), part_parallel=4)
+    np.testing.assert_array_equal(seq, par)
+    # More slices than parts: trailing slices never get work.
+    assert sum(1 for b in rep.slice_busy_s if b > 0) <= len(rep.parts)
+
+
+def test_thread_mode_checkpoint_byte_identity(tmp_path):
+    """Sequential and part-parallel runs leave interchangeable checkpoints:
+    the final pipeline state restores to identical arrays either way."""
+    from repro.core.dckcore import PipelineState
+
+    g = rmat(10, 8, seed=11)
+    ck_seq, ck_par = str(tmp_path / "seq"), str(tmp_path / "par")
+    seq, _ = dc_kcore(g, thresholds=(4, 10), checkpoint_dir=ck_seq)
+    par, _ = dc_kcore(g, thresholds=(4, 10), checkpoint_dir=ck_par,
+                      part_parallel=2)
+    np.testing.assert_array_equal(seq, par)
+    s1 = PipelineState.restore(ck_seq, g.n_nodes)
+    s2 = PipelineState.restore(ck_par, g.n_nodes)
+    assert s1.parts_done == s2.parts_done and s1.complete and s2.complete
+    np.testing.assert_array_equal(s1.coreness, s2.coreness)
+    np.testing.assert_array_equal(s1.finalized, s2.finalized)
+
+
+class SimulatedCrash(Exception):
+    pass
+
+
+def test_thread_mode_boundary_crash_storm(tmp_path):
+    """Kill the part-parallel run at EVERY part boundary in turn; each
+    resume (also part-parallel) must converge to the sequential answer
+    with disk bounded to one retained step."""
+    g = rmat(10, 8, seed=11)
+    thresholds = (4, 10, 20)
+    base, base_rep = dc_kcore(g, thresholds=thresholds)
+    ck = str(tmp_path / "ck")
+
+    def killer(idx, report):
+        raise SimulatedCrash
+
+    cycles = 0
+    while True:
+        try:
+            core, rep = dc_kcore(
+                g, thresholds=thresholds, part_parallel=2,
+                checkpoint_dir=ck, resume=cycles > 0,
+                on_part_done=killer if cycles < len(base_rep.parts) else None,
+            )
+            break
+        except SimulatedCrash:
+            cycles += 1
+            assert cycles < 50, "storm did not converge"
+    np.testing.assert_array_equal(core, base)
+    np.testing.assert_array_equal(core, peel_coreness(g))
+    assert cycles == len(base_rep.parts)
+    steps = [d for d in os.listdir(ck)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    assert len(steps) == 1
+
+
+def test_thread_mode_midsweep_crash_resumes(tmp_path):
+    """A crash INSIDE a part (sweep snapshot granularity) on a
+    part-parallel run: resume warm-restarts mid-part, byte-identical."""
+    g = rmat(10, 8, seed=11)
+    base, _ = dc_kcore(g, thresholds=(4, 10))
+    ck = str(tmp_path / "ck")
+    calls = []
+
+    def kill_at_second(cursor, sweep, save_s):
+        calls.append((cursor, sweep))
+        if len(calls) == 2:
+            raise SimulatedCrash
+
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=(4, 10), part_parallel=2, checkpoint_dir=ck,
+                 sweep_checkpoint_every=1, on_sweep_saved=kill_at_second)
+    core, rep = dc_kcore(g, thresholds=(4, 10), part_parallel=2,
+                         checkpoint_dir=ck, resume=True,
+                         sweep_checkpoint_every=1)
+    np.testing.assert_array_equal(core, base)
+    assert any(p.resumed_at_sweep > 0 for p in rep.parts)
+
+
+def test_cross_mode_resume(tmp_path):
+    """A sequential run killed mid-decomposition resumes part-parallel
+    (and vice versa) — checkpoints carry no mode dependence."""
+    g = rmat(10, 8, seed=11)
+    thresholds = (4, 10, 20)
+    base, _ = dc_kcore(g, thresholds=thresholds)
+
+    def kill_first(idx, report):
+        raise SimulatedCrash
+
+    ck1 = str(tmp_path / "a")
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck1,
+                 on_part_done=kill_first)
+    core, _ = dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck1,
+                       resume=True, part_parallel=2)
+    np.testing.assert_array_equal(core, base)
+
+    ck2 = str(tmp_path / "b")
+    with pytest.raises(SimulatedCrash):
+        dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck2,
+                 part_parallel=2, on_part_done=kill_first)
+    core, _ = dc_kcore(g, thresholds=thresholds, checkpoint_dir=ck2,
+                       resume=True)
+    np.testing.assert_array_equal(core, base)
+
+
+def test_part_parallel_validation():
+    g = rmat(8, 8, seed=1)
+    with pytest.raises(ValueError):
+        dc_kcore(g, thresholds=(4,), part_parallel=0)
+    with pytest.raises(ValueError):
+        dc_kcore(g, thresholds=(4,), part_parallel=2, overlap=True)
+    with pytest.raises(ValueError):
+        # A mesh plan without part_parallel is meaningless.
+        dc_kcore(g, thresholds=(4,), part_parallel_plan=object())
+
+
+# --------------------------------------------------------------------- #
+# Device mode: real mesh slices in a subprocess (REPRO_FORCE_DEVICES).
+# --------------------------------------------------------------------- #
+def test_device_fold_matches_host_external_info():
+    """The device-resident E(v) boundary fold is bit-exact vs the host
+    chunked pass — counts AND the DivideStats bookkeeping — at several
+    chunk sizes, and moves zero collective bytes on a 1-device plan."""
+    out = run_with_devices(
+        preamble(N_DEV)
+        + rf"""
+from repro.core.distributed import device_external_info
+from repro.graph.build import DivideStats, external_info
+from repro.launch.mesh import make_mesh_plan_for_devices
+plan = make_mesh_plan_for_devices({N_DEV})
+g = rmat(10, 8, seed=3)
+rng = np.random.default_rng(0)
+for trial in range(3):
+    keep = rng.random(g.n_nodes) < (0.3, 0.7, 1.0)[trial]
+    upper = rng.random(g.n_nodes) < 0.5
+    for cs in (None, 1 << 12):
+        hs, ds = DivideStats(chunk_slots=cs or 0), DivideStats(chunk_slots=cs or 0)
+        host = external_info(g, keep, upper, chunk_slots=cs, stats=hs)
+        dev, moved = device_external_info(g, keep, upper, plan,
+                                          chunk_slots=cs, stats=ds)
+        np.testing.assert_array_equal(dev, host)
+        assert moved > 0
+        assert (hs.n_chunks, hs.input_slots, hs.kept_slots) == \
+               (ds.n_chunks, ds.input_slots, ds.kept_slots)
+plan1 = make_mesh_plan_for_devices(1)
+dev, moved = device_external_info(g, keep, upper, plan1)
+np.testing.assert_array_equal(dev, external_info(g, keep, upper))
+assert moved == 0
+print("OK")
+""",
+        n_devices=N_DEV,
+    )
+    assert "OK" in out
+
+
+def test_part_parallel_device_mode_matches():
+    """Two real mesh slices conquering concurrently == sequential ==
+    oracle; boundary exchange runs on the device (bytes counted) and both
+    slices report busy time."""
+    out = run_with_devices(
+        preamble(N_DEV)
+        + rf"""
+from repro.launch.mesh import make_mesh_plan_for_devices
+plan = make_mesh_plan_for_devices({N_DEV})
+g = rmat(10, 8, seed=11)
+seq, _ = dc_kcore(g, thresholds=(4, 10), strategy="exact")
+par, rep = dc_kcore(g, thresholds=(4, 10), strategy="exact",
+                    part_parallel=2, part_parallel_plan=plan)
+np.testing.assert_array_equal(par, seq)
+np.testing.assert_array_equal(par, peel_coreness(g))
+assert rep.part_parallel == 2
+assert rep.boundary_exchange_bytes > 0
+assert len(rep.slice_busy_s) == 2
+assert rep.conquer_wall_s > 0
+assert all(0.0 <= u <= 1.0 for u in rep.slice_utilization)
+assert all(p.slice_index in (0, 1) for p in rep.parts)
+assert len({{p.slice_index for p in rep.parts}}) == 2  # both slices conquered
+print("OK")
+""",
+        n_devices=N_DEV,
+    )
+    assert "OK" in out
+
+
+def test_part_parallel_device_mode_crash_resume(tmp_path):
+    """Mid-part crash while a slice is conquering on devices: the lead-part
+    sweep-snapshot discipline leaves sequential-equivalent disk, and a
+    part-parallel resume completes byte-identically with bounded disk."""
+    out = run_with_devices(
+        preamble(N_DEV)
+        + rf"""
+import os
+from repro.launch.mesh import make_mesh_plan_for_devices
+plan = make_mesh_plan_for_devices({N_DEV})
+g = rmat(10, 8, seed=11)
+base, _ = dc_kcore(g, thresholds=(4, 10), strategy="exact")
+ck = {str(tmp_path / "ck")!r}
+class Crash(Exception): pass
+calls = []
+def killer(cursor, sweep, save_s):
+    calls.append((cursor, sweep))
+    if len(calls) == 2: raise Crash
+try:
+    dc_kcore(g, thresholds=(4, 10), strategy="exact", part_parallel=2,
+             part_parallel_plan=plan, checkpoint_dir=ck,
+             sweep_checkpoint_every=1, on_sweep_saved=killer)
+    raise SystemExit("no crash")
+except Crash:
+    pass
+core, rep = dc_kcore(g, thresholds=(4, 10), strategy="exact", part_parallel=2,
+                     part_parallel_plan=plan, checkpoint_dir=ck, resume=True,
+                     sweep_checkpoint_every=1)
+np.testing.assert_array_equal(core, base)
+np.testing.assert_array_equal(core, peel_coreness(g))
+assert any(p.resumed_at_sweep > 0 for p in rep.parts)
+steps = [d for d in os.listdir(ck) if d.startswith("step_") and not d.endswith(".tmp")]
+assert len(steps) == 1, steps
+print("OK")
+""",
+        n_devices=N_DEV,
+    )
+    assert "OK" in out
+
+
+def test_modeled_cost_pinned_to_measured_bytes():
+    """The scheduler's collective term on a slice spec == the live slice
+    engine's measured counter, byte for byte, on a frontier=False run
+    (every sweep full => the planned schedule is exact)."""
+    out = run_with_devices(
+        preamble(N_DEV)
+        + rf"""
+from repro.core.distributed import decompose_distributed
+from repro.core.partsched import cost_for_plan, slice_mesh_plans, spec_of
+from repro.launch.mesh import make_mesh_plan_for_devices
+plan = make_mesh_plan_for_devices({N_DEV})
+g = rmat(9, 8, seed=2)
+bg = bucketize(g)
+for i, sp in enumerate(slice_mesh_plans(plan, 2)):
+    spec = spec_of(sp, i)
+    base = decompose_distributed(bg, sp, frontier=False)
+    cost = cost_for_plan(bg, 7, spec, frontier=False,
+                         n_iters=base.iterations, full_sweeps=base.iterations)
+    assert cost.cursor == 7
+    measured = sum(base.collective_bytes_per_iter)
+    if spec.n_devices > 1:
+        assert cost.collective_bytes == measured, (cost.collective_bytes, measured)
+    else:
+        assert cost.collective_bytes == 0 and measured == 0
+print("OK")
+""",
+        n_devices=N_DEV,
+    )
+    assert "OK" in out
+
+
+# --------------------------------------------------------------------- #
+# Multi-process harness: rank fleet + failure capture + leak gate.
+# --------------------------------------------------------------------- #
+_RANK_SNIPPET = (
+    preamble(N_DEV)
+    + rf"""
+import hashlib, os
+from repro.launch.mesh import make_mesh_plan_for_devices
+rank = int(os.environ["REPRO_RANK"]); world = int(os.environ["REPRO_WORLD"])
+assert 0 <= rank < world
+g = rmat(10, 8, seed=11)
+if rank == 0:
+    core, _ = dc_kcore(g, thresholds=(4, 10), strategy="exact")
+else:
+    plan = make_mesh_plan_for_devices({N_DEV})
+    core, rep = dc_kcore(g, thresholds=(4, 10), strategy="exact",
+                         part_parallel=2, part_parallel_plan=plan)
+    assert rep.part_parallel == 2
+print("DIGEST", hashlib.sha256(np.ascontiguousarray(core).tobytes()).hexdigest())
+"""
+)
+
+
+def test_multiprocess_rank_differential(worker_harness):
+    """Two ranks spawned concurrently — rank 0 sequential, rank 1
+    part-parallel over real mesh slices — must print identical coreness
+    digests (deterministic seeds make the comparison exact across
+    process boundaries)."""
+    for rank in range(2):
+        worker_harness.spawn(_RANK_SNIPPET, n_devices=N_DEV, rank=rank, world=2)
+    outs = worker_harness.join(timeout=600)
+    digests = [line.split()[1] for out in outs for line in out.splitlines()
+               if line.startswith("DIGEST")]
+    assert len(digests) == 2
+    assert digests[0] == digests[1]
+
+
+def test_harness_surfaces_child_tracebacks(worker_harness):
+    """A failing rank's traceback lands verbatim in the join() failure —
+    and the passing rank's result is still collected first."""
+    worker_harness.spawn("print('fine')", n_devices=2, rank=0, world=2)
+    worker_harness.spawn(
+        "raise ValueError('boom-part-parallel-7f3a')", n_devices=2,
+        rank=1, world=2,
+    )
+    with pytest.raises(AssertionError) as ei:
+        worker_harness.join(timeout=120)
+    msg = str(ei.value)
+    assert "boom-part-parallel-7f3a" in msg
+    assert "rank 1/2" in msg
+
+
+def test_harness_leak_gate_kills_strays(worker_harness):
+    """A child that outlives the test body is detected and killed; the
+    fixture would fail the test if we didn't reap it here."""
+    import time
+
+    worker_harness.spawn("import time; time.sleep(600)", n_devices=2)
+    time.sleep(0.2)
+    assert worker_harness.leaked()
+    pids = worker_harness.terminate_leaked()
+    assert pids
+    assert not worker_harness.leaked()
