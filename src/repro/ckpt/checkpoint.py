@@ -166,7 +166,7 @@ class CheckpointManager:
         ``on_done(step, seconds)``, called from the worker thread after the
         atomic rename and retention GC. ``on_done`` must not raise.
         """
-        t_blocked = time.time()
+        t_blocked = time.perf_counter()
         self.wait()
         if blocking:
             host_tree = jax.tree.map(np.asarray, tree)
@@ -174,14 +174,14 @@ class CheckpointManager:
             host_tree = jax.tree.map(lambda x: np.array(x, copy=True), tree)
 
         def work():
-            t0 = time.time()
+            t0 = time.perf_counter()
             try:
                 save_pytree(self.path, host_tree, step, extra)
                 self._gc()
             except BaseException as e:  # surfaced on the next wait()
                 self._error = e
                 return
-            self.last_save_seconds = time.time() - t0
+            self.last_save_seconds = time.perf_counter() - t0
             if on_done is not None:
                 on_done(step, self.last_save_seconds)
 
@@ -194,7 +194,7 @@ class CheckpointManager:
                 name=f"{SAVE_THREAD_PREFIX}:{os.path.basename(self.path)}:{step}",
             )
             self._pending.start()
-        return time.time() - t_blocked
+        return time.perf_counter() - t_blocked
 
     def wait(self):
         """Join the in-flight save, re-raising any failure it hit."""

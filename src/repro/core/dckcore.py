@@ -89,6 +89,7 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import logging
 import os
 import re
 import shutil
@@ -374,14 +375,14 @@ class PipelineState:
         if manager is None:
             manager = CheckpointManager(checkpoint_dir, keep=1)
             blocking = True
-        t0 = time.time()
+        t0 = time.perf_counter()
         manager.wait()
         step = self.parts_done + (1 if self.complete else 0)
         manager.save(
             self.arrays(), step, extra=self.extra(),
             blocking=blocking, on_done=on_done,
         )
-        return time.time() - t0
+        return time.perf_counter() - t0
 
     @staticmethod
     def restore(checkpoint_dir: str, n_nodes: int) -> Optional["PipelineState"]:
@@ -490,7 +491,7 @@ class SweepSnapshot:
         if manager is None:
             manager = CheckpointManager(sweep_dir, keep=1)
             blocking = True
-        t0 = time.time()
+        t0 = time.perf_counter()
         extra = {
             "format": SWEEP_FORMAT,
             "parts_done": int(self.parts_done),
@@ -504,14 +505,16 @@ class SweepSnapshot:
             {"part_coreness": np.asarray(self.coreness, dtype=np.int32)},
             self.step, extra=extra, blocking=blocking, on_done=on_done,
         )
-        return time.time() - t0
+        return time.perf_counter() - t0
 
     @staticmethod
     def restore(sweep_dir: str) -> Optional["SweepSnapshot"]:
         """Latest complete snapshot under ``sweep_dir``; ``None`` when there
         is none or it is unreadable/from another format — sweep snapshots
         are an optimization, so a bad one degrades to part-boundary resume
-        instead of failing the run."""
+        instead of failing the run. The degradation is logged (one line,
+        path + reason) so a resume that unexpectedly fell back to the part
+        boundary is diagnosable."""
         from repro.ckpt import latest_step, restore_pytree
 
         if latest_step(sweep_dir) is None:
@@ -520,9 +523,18 @@ class SweepSnapshot:
             arrays, _step, extra = restore_pytree(
                 sweep_dir, {"part_coreness": np.zeros(0, np.int32)}
             )
-        except Exception:
+        except Exception as exc:
+            logging.getLogger(__name__).warning(
+                "sweep snapshot %s unreadable (%s: %s) — resuming from the "
+                "part boundary instead", sweep_dir, type(exc).__name__, exc,
+            )
             return None
         if extra.get("format") != SWEEP_FORMAT:
+            logging.getLogger(__name__).warning(
+                "sweep snapshot %s has format %r (expected %r) — resuming "
+                "from the part boundary instead",
+                sweep_dir, extra.get("format"), SWEEP_FORMAT,
+            )
             return None
         return SweepSnapshot(
             coreness=arrays["part_coreness"],
@@ -714,12 +726,12 @@ class _PartPipeline:
                     cand_mask=cand_mask, dstats=dstats,
                     extract_time_s=extract_time, speculative=speculative,
                 )
-            t0 = time.time()
+            t0 = time.perf_counter()
             part_g, part_local_ids = induced_subgraph(
                 graph, cand_mask, chunk_slots=self.divide_chunk, stats=dstats
             )
             part_ext = ext[cand_mask]
-            extract_time += time.time() - t0
+            extract_time += time.perf_counter() - t0
             return PartPlan(
                 cursor=cursor, name=f"core>={t}", threshold=t,
                 part_g=part_g, part_local_ids=part_local_ids,
@@ -747,7 +759,7 @@ class _PartPipeline:
         divide stage (prefetched plans arrive with ``bg`` already built)."""
         if plan.bg is not None or plan.part_g is None:
             return
-        t0 = time.time()
+        t0 = time.perf_counter()
         # Reorder the part, not the whole graph: each part is a fresh id
         # space, and locality only has to hold within the tiles actually
         # decomposed together. part_ext stays in part-local original order;
@@ -760,7 +772,7 @@ class _PartPipeline:
             ext=plan.part_ext, row_align=self.row_align,
             max_bucket_rows=self.max_bucket_rows,
         )
-        plan.bucketize_time_s = time.time() - t0
+        plan.bucketize_time_s = time.perf_counter() - t0
 
     # ---------------- prefetch stage ---------------- #
     def _submit_prefetch(self, plan: PartPlan) -> None:
@@ -807,7 +819,7 @@ class _PartPipeline:
         finalizes — the shared speculation body of the overlap prefetch
         (depth 1, worker thread) and the part-parallel wave planner
         (depth ``part_parallel``, main thread)."""
-        t0 = time.time()
+        t0 = time.perf_counter()
         stats = self._fresh_stats()
         keep_local = ~cand_mask
         ext_delta = self._fold_external(graph, keep_local, cand_mask, stats)
@@ -818,7 +830,7 @@ class _PartPipeline:
         return _Prefetch(
             base_cursor=cursor, shrink_graph=shrink_graph,
             shrink_keep_ids=keep_ids, ext_next=ext_next,
-            shrink_stats=stats, shrink_time_s=time.time() - t0,
+            shrink_stats=stats, shrink_time_s=time.perf_counter() - t0,
         )
 
     def _prefetch_task(self, graph: Graph, ext: np.ndarray,
@@ -853,7 +865,7 @@ class _PartPipeline:
         runner books it on the main thread — slice threads must not race
         on the counter)."""
         state = self.state
-        t0 = time.time()
+        t0 = time.perf_counter()
         init = None
         start_sweep = 0
         if lead and self.pending_snap is not None:
@@ -898,7 +910,7 @@ class _PartPipeline:
 
         if account:
             self.preprocess_time_s += (
-                (time.time() - t0) + plan.bucketize_time_s + plan.extract_time_s
+                (time.perf_counter() - t0) + plan.bucketize_time_s + plan.extract_time_s
             )
         fn = fn if fn is not None else self.decompose_fn
         if init is not None or hook is not None:
@@ -982,7 +994,7 @@ class _PartPipeline:
         """The sequential fold: shrink the remaining graph by the part's
         ACTUALLY finalized nodes."""
         state = self.state
-        t0 = time.time()
+        t0 = time.perf_counter()
         newly_mask_local = np.zeros(self.remaining_graph.n_nodes, dtype=bool)
         newly_mask_local[plan.part_local_ids[final_local]] = True
         keep_local = ~newly_mask_local
@@ -996,7 +1008,7 @@ class _PartPipeline:
         state.ext_remaining = state.ext_remaining[keep_local] + ext_delta
         state.remaining_ids = state.remaining_ids[keep_ids]
         self.remaining_graph = new_graph
-        self.preprocess_time_s += time.time() - t0
+        self.preprocess_time_s += time.perf_counter() - t0
         report.divide_transient_bytes = plan.dstats.peak_transient_bytes
 
     def _merge_rest(self, plan: PartPlan, res, density: float,
@@ -1118,9 +1130,9 @@ class _PartPipeline:
             self.slice_busy_s[s] += out[0].wall_time_s
             return out
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         results = conquer_wave(schedule, run_part)
-        self.conquer_wall_s += time.time() - t0
+        self.conquer_wall_s += time.perf_counter() - t0
 
         for i, plan in enumerate(wave):
             if plan.is_empty:
@@ -1396,7 +1408,7 @@ def dc_kcore(
     if sweep_checkpoint_every is not None and checkpoint_dir is None:
         raise ValueError("sweep_checkpoint_every requires checkpoint_dir")
     thresholds = sorted(set(int(t) for t in thresholds), reverse=True)
-    t_start = time.time()
+    t_start = time.perf_counter()
 
     n = g.n_nodes
     state: Optional[PipelineState] = None
@@ -1436,7 +1448,7 @@ def dc_kcore(
         if state.complete:
             report = DCKCoreReport(
                 parts=state.reports,
-                total_time_s=time.time() - t_start,
+                total_time_s=time.perf_counter() - t_start,
                 preprocess_time_s=0.0,
                 resumed_parts=resumed_parts,
                 overlap=overlap,
@@ -1497,7 +1509,7 @@ def dc_kcore(
 
     report = DCKCoreReport(
         parts=pipeline.parts,
-        total_time_s=time.time() - t_start,
+        total_time_s=time.perf_counter() - t_start,
         preprocess_time_s=pipeline.preprocess_time_s,
         resumed_parts=resumed_parts,
         overlap=overlap,

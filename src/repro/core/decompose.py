@@ -448,6 +448,7 @@ def decompose(
     gauss_seidel: bool = True,
     frontier: bool = True,
     init_coreness: Optional[np.ndarray] = None,
+    seed_nodes: Optional[np.ndarray] = None,
     on_sweep=None,
     int16: bool = False,
     fused_compaction_min_tiles: int = 64,
@@ -472,6 +473,16 @@ def decompose(
     are permuted back — a snapshot taken under one ordering restarts
     correctly under any other.
 
+    ``seed_nodes`` restricts the INITIAL active frontier to the buckets
+    owning the given nodes (original-id boolean mask or id array) instead
+    of every bucket — the incremental engine's entry point: with a valid
+    ``init_coreness`` upper bound and a seed set that covers every node
+    whose estimate must move (see :mod:`repro.core.incremental` for the
+    soundness argument), the fixed point reached is identical to a full
+    sweep, but quiescent regions are never touched. Requires
+    ``frontier=True`` (the dirty-bit propagation is what re-activates
+    neighbors of changed seeds).
+
     ``op="fused"`` dispatches the fused Pallas sweep kernel; ``int16``
     (fused only) opts into the halved-width estimate vector behind the
     overflow guard, and ``fused_compaction_min_tiles`` sets the tile count
@@ -481,7 +492,7 @@ def decompose(
     int32 regardless, so every resume/checkpoint consumer is dtype-blind.
     """
     n = bg.n_nodes
-    t0 = time.time()
+    t0 = time.perf_counter()
     est_dtype = jnp.int32
     if int16:
         if op != "fused":
@@ -533,6 +544,23 @@ def decompose(
     bucket_widths = list(bg.widths)
     adj = bg.bucket_adjacency()
     active = np.ones(n_buckets, dtype=bool)
+    if seed_nodes is not None:
+        if not frontier:
+            raise ValueError("seed_nodes requires frontier=True (seed "
+                             "restriction relies on dirty-bit scheduling "
+                             "to re-activate neighbors)")
+        seeds = np.asarray(seed_nodes)
+        if seeds.dtype == bool:
+            if seeds.shape != (n,):
+                raise ValueError(f"seed mask shape {seeds.shape} != ({n},)")
+            seeds = np.nonzero(seeds)[0]
+        if bg.inv_perm is not None:
+            # Seeds arrive as original ids; the owner map is in layout
+            # order, and original id o sits at layout row inv_perm[o].
+            seeds = np.asarray(bg.inv_perm)[seeds]
+        owner = bg.node_bucket_map()[:-1][seeds]
+        active = np.zeros(n_buckets, dtype=bool)
+        active[owner[owner >= 0]] = True  # -1: deg-0 rows own no bucket
 
     limit = max_iter if max_iter is not None else max(4, n)
     # Hoisted once: re-uploading the O(n) permutation every sweep would put
@@ -610,7 +638,7 @@ def decompose(
         comm_amount=total,
         comm_per_iter=comm_per_iter,
         peak_bytes=int(peak),
-        wall_time_s=time.time() - t0,
+        wall_time_s=time.perf_counter() - t0,
         active_rows_per_iter=active_rows_per_iter,
         rows_per_full_sweep=bg.rows_per_full_sweep,
         sweep_bytes_per_iter=sweep_bytes_per_iter,

@@ -132,14 +132,14 @@ def timed_candidates(
     stats: Optional[DivideStats] = None,
 ) -> Tuple[np.ndarray, float]:
     """Candidate mask plus extraction wall time (paper Fig 9 measurement)."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     if strategy == "rough":
         mask = rough_candidates(g.degrees, ext, t)
     elif strategy == "exact":
         mask = exact_candidates(g, ext, t, chunk_slots=chunk_slots, stats=stats)
     else:
         raise ValueError(f"unknown divide strategy: {strategy}")
-    return mask, time.time() - t0
+    return mask, time.perf_counter() - t0
 
 
 def plan_thresholds(

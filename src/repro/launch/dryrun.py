@@ -60,7 +60,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, rules=None,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
     shape = SHAPES[shape_name]
-    t0 = time.time()
+    t0 = time.perf_counter()
     specs, cfg, log = input_specs(arch, shape_name, mesh, rules=rules)
     the_rules = rules or rules_for(cfg, shape_name)
     n_params = count_params(build_specs(cfg))
@@ -82,9 +82,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, rules=None,
 
     with mesh, active_mesh(mesh, the_rules):
         lowered = jax.jit(fn).lower(**kwargs)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = cost_analysis_dict(compiled)

@@ -36,7 +36,12 @@ sweep engine — ``fused`` is the single-kernel Pallas sweep (gather +
 h-index + dirty push fused per row tile; interpret mode on CPU) — and
 ``--int16`` opts the fused engine into the halved-width estimate mode
 (falls back to int32 automatically when any starting estimate reaches
-2^15; coreness is bit-identical in every case).
+2^15; coreness is bit-identical in every case). With ``--part-parallel``,
+slices are priced against the real memory budget: slice capacity defaults
+to the ``--budget-gb`` value (override with ``--slice-capacity-gb``), and a
+part whose modeled resident bytes no slice admits triggers a re-divide
+with smaller parts (``plan_thresholds`` at a halved budget) instead of
+aborting the pipeline.
 """
 from __future__ import annotations
 
@@ -45,6 +50,7 @@ import time
 
 from repro.core.dckcore import dc_kcore
 from repro.core.divide import plan_thresholds
+from repro.core.partsched import SliceCapacityError
 from repro.graph import barabasi_albert, erdos_renyi, rmat
 from repro.graph.io import (
     csr_from_edge_chunks,
@@ -87,6 +93,57 @@ def load_graph(spec: str, seed: int, edge_chunk: int | None = None):
         )
         return g, stats
     return g, None
+
+
+def run_with_capacity_replan(
+    g,
+    thresholds,
+    *,
+    replan_budget_bytes=None,
+    max_replans=3,
+    dc=dc_kcore,
+    **dc_kwargs,
+):
+    """Run ``dc_kcore``; on :class:`SliceCapacityError`, re-divide and retry.
+
+    The wave scheduler refuses a part whose modeled resident bytes exceed
+    every slice's capacity. When that happens mid-run the right response is
+    not to abort: re-plan the thresholds with a smaller per-part budget
+    (halved each attempt, with a proportionally larger part allowance) so
+    the oversized part is split, and start over from scratch. The shrink
+    starts from whichever of ``replan_budget_bytes`` and the wave's
+    ``slice_capacity_bytes`` is smaller — capacity is the constraint that
+    tripped, and halving a budget orders of magnitude above it would burn
+    every retry without changing the plan. ``resume`` is forced off on
+    retries because the aborted attempt's
+    checkpoints describe a different partition. Gives up and re-raises
+    after ``max_replans`` re-divides, or immediately when no
+    ``replan_budget_bytes`` is known to shrink from.
+
+    Returns ``(core, report, thresholds, n_replans)`` with the thresholds
+    that actually completed.
+    """
+    attempt = 0
+    while True:
+        try:
+            core, report = dc(g, thresholds=thresholds, **dc_kwargs)
+            return core, report, thresholds, attempt
+        except SliceCapacityError as exc:
+            attempt += 1
+            if replan_budget_bytes is None or attempt > max_replans:
+                raise
+            base = int(replan_budget_bytes)
+            cap = dc_kwargs.get("slice_capacity_bytes")
+            if cap is not None:
+                base = min(base, int(cap))
+            shrunk = max(1, base >> attempt)
+            thresholds = plan_thresholds(
+                g.degrees, shrunk, max_parts=8 * (1 << attempt)
+            )
+            print(f"slice capacity exceeded ({exc}); re-divided for "
+                  f"{shrunk / 2**30:.3f} GB/part -> thresholds {thresholds} "
+                  f"(retry {attempt}/{max_replans})")
+            dc_kwargs["resume"] = False
 
 
 def parse_max_bucket_rows(v: str):
@@ -153,6 +210,12 @@ def main():
                          "order; byte-identical coreness). Without "
                          "--devices the slices are worker threads sharing "
                          "--engine")
+    ap.add_argument("--slice-capacity-gb", type=float, default=None,
+                    metavar="GB",
+                    help="cap each part-parallel slice's modeled resident "
+                         "bytes (default: the --budget-gb value, so slices "
+                         "are priced against the same budget the divide "
+                         "planned for; requires --part-parallel)")
     ap.add_argument("--devices", type=int, default=None, metavar="N",
                     help="force N virtual host devices and run the "
                          "shard_map engine over a data x model mesh split "
@@ -175,6 +238,8 @@ def main():
                  "speculation) — pass one or the other")
     if args.devices is not None and args.engine != "sorted":
         ap.error("--devices selects the shard_map engine; drop --engine")
+    if args.slice_capacity_gb is not None and args.part_parallel is None:
+        ap.error("--slice-capacity-gb requires --part-parallel")
 
     part_parallel_plan = None
     if args.devices is not None:
@@ -193,9 +258,9 @@ def main():
             args.devices, model_parallel=mp
         )
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     g, ingest = load_graph(args.graph, args.seed, edge_chunk=args.edge_chunk)
-    ingest_s = time.time() - t0
+    ingest_s = time.perf_counter() - t0
     print(f"graph: n={g.n_nodes:,} m={g.n_edges:,} max_deg={int(g.degrees.max())}")
     if ingest is not None:
         print(f"ingest (streamed, {ingest_s:.2f}s): chunk={ingest.chunk_edges:,} edges, "
@@ -205,24 +270,44 @@ def main():
               f"vs in-memory baseline {ingest.baseline_transient_bytes/2**20:.2f} MiB "
               f"(output CSR {ingest.output_bytes/2**20:.2f} MiB)")
 
-    if args.budget_gb is not None:
-        thresholds = plan_thresholds(g.degrees, int(args.budget_gb * 2**30))
+    budget_bytes = (
+        int(args.budget_gb * 2**30) if args.budget_gb is not None else None
+    )
+    if budget_bytes is not None:
+        thresholds = plan_thresholds(g.degrees, budget_bytes)
         print(f"planned thresholds for {args.budget_gb} GB/part: {thresholds}")
     else:
         thresholds = [int(t) for t in args.thresholds.split(",") if t]
 
-    core, report = dc_kcore(g, thresholds=thresholds, strategy=args.strategy,
-                            reorder=args.reorder,
-                            reorder_sample_edges=args.reorder_sample,
-                            max_bucket_rows=args.max_bucket_rows,
-                            checkpoint_dir=args.checkpoint_dir,
-                            resume=args.resume,
-                            divide_chunk=args.divide_chunk,
-                            sweep_checkpoint_every=args.sweep_checkpoint_every,
-                            overlap=args.overlap,
-                            engine=args.engine, int16=args.int16,
-                            part_parallel=args.part_parallel,
-                            part_parallel_plan=part_parallel_plan)
+    # Price the part-parallel slices against the real budget: an oversized
+    # part then fails LPT assignment at planning time (SliceCapacityError,
+    # caught below as a re-divide) instead of OOMing mid-wave.
+    slice_capacity_bytes = None
+    if args.part_parallel is not None:
+        if args.slice_capacity_gb is not None:
+            slice_capacity_bytes = int(args.slice_capacity_gb * 2**30)
+        elif budget_bytes is not None:
+            slice_capacity_bytes = budget_bytes
+
+    core, report, thresholds, n_replans = run_with_capacity_replan(
+        g, thresholds,
+        replan_budget_bytes=budget_bytes,
+        strategy=args.strategy,
+        reorder=args.reorder,
+        reorder_sample_edges=args.reorder_sample,
+        max_bucket_rows=args.max_bucket_rows,
+        checkpoint_dir=args.checkpoint_dir,
+        resume=args.resume,
+        divide_chunk=args.divide_chunk,
+        sweep_checkpoint_every=args.sweep_checkpoint_every,
+        overlap=args.overlap,
+        engine=args.engine, int16=args.int16,
+        part_parallel=args.part_parallel,
+        part_parallel_plan=part_parallel_plan,
+        slice_capacity_bytes=slice_capacity_bytes)
+    if n_replans:
+        print(f"capacity re-divides: {n_replans} (final thresholds "
+              f"{thresholds})")
     print(f"\nDC-kCore done in {report.total_time_s:.2f}s "
           f"(preprocess {report.preprocess_time_s:.2f}s, engine={args.engine}"
           f"{'+int16' if args.int16 else ''}, reorder={args.reorder}, "
@@ -273,10 +358,10 @@ def main():
                  if p.slice_index >= 0 else "")
               + (" [prefetched]" if p.prefetched else ""))
     if args.check:
-        t0 = time.time()
+        t0 = time.perf_counter()
         oracle = peel_coreness(g)
         ok = bool((core == oracle).all())
-        print(f"oracle check ({time.time()-t0:.1f}s): {'CONSISTENT' if ok else 'MISMATCH'}")
+        print(f"oracle check ({time.perf_counter()-t0:.1f}s): {'CONSISTENT' if ok else 'MISMATCH'}")
         if not ok:
             raise SystemExit(1)
 

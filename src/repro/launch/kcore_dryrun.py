@@ -189,11 +189,11 @@ def run_case(name, n, m, cand, wire, multi_pod=True, tag="", n_iters=30):
         n, buckets, plan, wire_dtype, id_dtype
     )
     sweep = make_sweep_fn(plan, cand, wire_dtype)(len(bucket_specs))
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         lowered = sweep.lower(c, ext, active, node_tile, bucket_specs)
         compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["compile_s"] = round(time.perf_counter() - t0, 1)
     mem = compiled.memory_analysis()
     cost = cost_analysis_dict(compiled)
     colls = parse_collectives(compiled.as_text())

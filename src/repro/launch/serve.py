@@ -40,9 +40,9 @@ def main():
         extras = {"vision_embeds": jax.random.normal(
             jax.random.PRNGKey(2), (args.batch, cfg.n_vision_tokens, cfg.d_model),
             cfg.dtype)}
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = greedy_generate(params, prompt, cfg, args.new_tokens, extras=extras)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"{cfg.name}: generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
     print(out[:, :12])

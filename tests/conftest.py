@@ -13,7 +13,9 @@ from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
 # Worker threads the pipeline may spin up; every dc_kcore /
 # CheckpointManager exit path must drain them (close()/wait()), so one
 # outliving a test is a leak — equivalent to a missed wait()-on-exit.
-_PIPELINE_THREAD_PREFIXES = ("ckpt-save", "dckcore-prefetch", "dckcore-conquer")
+_PIPELINE_THREAD_PREFIXES = (
+    "ckpt-save", "dckcore-prefetch", "dckcore-conquer", "kcore-serve",
+)
 
 
 @pytest.fixture(autouse=True)

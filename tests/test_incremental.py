@@ -1,0 +1,432 @@
+"""Differential suite for incremental coreness maintenance.
+
+The contract under test is absolute: after every edit batch,
+``apply_updates`` must be BIT-IDENTICAL to a from-scratch decompose (and
+the BZ peeling oracle) on the post-edit graph — whichever internal mode it
+took (seed-restricted incremental re-sweep, full fallback, noop). The CSR
+delta layer carries the same discipline: its spliced graph must be
+bit-identical to ``Graph.from_edges`` on the post-edit edge set.
+
+Property tests run under hypothesis when installed; seeded ports of each
+property always run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.decompose import decompose
+from repro.core.incremental import apply_updates
+from repro.graph.build import bucketize
+from repro.graph.delta import EdgeEdits, apply_edge_deltas
+from repro.graph.editlog import EditLog, EditLogReader
+from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
+from repro.graph.oracle import peel_coreness
+from repro.graph.structs import Graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _canonical_pairs(src, dst):
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    lo, hi = np.minimum(src, dst), np.maximum(src, dst)
+    return set(zip(lo.tolist(), hi.tolist()))
+
+
+def _reference_graph(edge_set, n_nodes):
+    if not edge_set:
+        return Graph.empty(n_nodes)
+    u = np.array([p[0] for p in edge_set] + [p[1] for p in edge_set], np.int64)
+    v = np.array([p[1] for p in edge_set] + [p[0] for p in edge_set], np.int64)
+    return Graph.from_edges(u, v, n_nodes=n_nodes)
+
+
+def _assert_graph_identical(a: Graph, b: Graph):
+    assert a.n_nodes == b.n_nodes
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.indices, b.indices)
+    assert a.indptr.dtype == b.indptr.dtype
+    assert a.indices.dtype == b.indices.dtype
+
+
+def _random_batch(rng, g, n_ins, n_del):
+    """n_ins random inserts + n_del deletes of EXISTING edges."""
+    n = g.n_nodes
+    iu = rng.integers(0, n, n_ins)
+    iv = rng.integers(0, n, n_ins)
+    du, dv = [], []
+    nz = np.nonzero(np.diff(g.indptr) > 0)[0]
+    for _ in range(n_del):
+        if nz.size == 0:
+            break
+        r = int(nz[rng.integers(0, nz.size)])
+        du.append(r)
+        dv.append(int(g.indices[rng.integers(g.indptr[r], g.indptr[r + 1])]))
+    return EdgeEdits.of(iu, iv, du, dv)
+
+
+def _run_churn(g, n_steps, seed, *, batch_hi=1, op="count",
+               dirty_budget_frac=0.5):
+    """Drive a churn stream; assert bit-identity after EVERY batch."""
+    core = peel_coreness(g).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    modes = {}
+    for step in range(n_steps):
+        k = int(rng.integers(1, batch_hi + 1))
+        ins = int(rng.integers(0, k + 1))
+        edits = _random_batch(rng, g, ins, k - ins)
+        res = apply_updates(g, core, edits, op=op,
+                            dirty_budget_frac=dirty_budget_frac)
+        g, core = res.graph, res.coreness
+        oracle = peel_coreness(g)
+        assert np.array_equal(core, oracle), (step, res.mode)
+        assert core.dtype == np.int32
+        modes[res.mode] = modes.get(res.mode, 0) + 1
+    # End-to-end engine check too (decompose, not just the peeling oracle).
+    full = decompose(bucketize(g), op=op)
+    assert np.array_equal(core, full.coreness)
+    return modes
+
+
+# ---------------------------------------------------------------------------
+# CSR delta application
+# ---------------------------------------------------------------------------
+
+def test_delta_bit_identical_to_from_edges_random():
+    rng = np.random.default_rng(0)
+    n = 60
+    for trial in range(25):
+        m = int(rng.integers(0, 300))
+        u, v = rng.integers(0, n, m), rng.integers(0, n, m)
+        g = Graph.from_edges(u, v, n_nodes=n)
+        mi, md = int(rng.integers(0, 40)), int(rng.integers(0, 40))
+        e = EdgeEdits.of(rng.integers(0, n, mi), rng.integers(0, n, mi),
+                         rng.integers(0, n, md), rng.integers(0, n, md))
+        res = apply_edge_deltas(g, e)
+        E = _canonical_pairs(u, v)
+        ins = _canonical_pairs(e.ins_src, e.ins_dst)
+        dels = _canonical_pairs(e.del_src, e.del_dst)
+        _assert_graph_identical(
+            res.graph, _reference_graph((E - dels) | ins, res.graph.n_nodes)
+        )
+        # Effective edits = exactly the edges that flipped.
+        assert res.n_inserted == len(ins - E)
+        assert res.n_deleted == len((dels & E) - ins)
+
+
+def test_delta_set_semantics_insert_and_delete_same_edge():
+    g = Graph.from_edges(np.array([0]), np.array([1]), n_nodes=3)
+    # Deleted AND inserted in one batch -> survives, zero effective edits.
+    res = apply_edge_deltas(g, EdgeEdits.of([0], [1], [0], [1]))
+    _assert_graph_identical(res.graph, g)
+    assert res.n_effective == 0
+
+
+def test_delta_noops_and_unknown_ids():
+    g = Graph.from_edges(np.array([0, 1]), np.array([1, 2]), n_nodes=3)
+    res = apply_edge_deltas(
+        g, EdgeEdits.of(ins_src=[0], ins_dst=[1],      # already present
+                        del_src=[0, 5], del_dst=[2, 6])  # absent / unknown id
+    )
+    _assert_graph_identical(res.graph, g)
+    assert res.n_effective == 0
+
+
+def test_delta_grows_node_space():
+    g = Graph.from_edges(np.array([0]), np.array([1]), n_nodes=2)
+    res = apply_edge_deltas(g, EdgeEdits.inserts([1, 5], [5, 4]))
+    assert res.graph.n_nodes == 6
+    ref = _reference_graph({(0, 1), (1, 5), (4, 5)}, 6)
+    _assert_graph_identical(res.graph, ref)
+    with pytest.raises(ValueError):
+        apply_edge_deltas(g, EdgeEdits.inserts([5], [1]), n_nodes=3)
+
+
+def test_delta_explicit_n_nodes_pads_isolated_rows():
+    g = Graph.from_edges(np.array([0]), np.array([1]), n_nodes=2)
+    res = apply_edge_deltas(g, EdgeEdits.of(), n_nodes=5)
+    assert res.graph.n_nodes == 5
+    assert np.array_equal(res.graph.degrees, [1, 1, 0, 0, 0])
+
+
+def test_delta_rejects_reordered_graph():
+    from repro.graph.reorder import reorder_graph
+
+    g = reorder_graph(rmat(8, 4, seed=1), "bfs")
+    with pytest.raises(ValueError, match="original-id"):
+        apply_edge_deltas(g, EdgeEdits.inserts([0], [1]))
+
+
+# ---------------------------------------------------------------------------
+# Edit log (EdgeStore chunk format)
+# ---------------------------------------------------------------------------
+
+def test_editlog_roundtrip(tmp_path):
+    with EditLog(str(tmp_path / "log")) as log:
+        reader = EditLogReader(log.workdir)
+        assert reader.poll() == 0 and reader.read_batch() is None
+        log.append([0, 5, 5], [5, 0, 5])            # dup + self-loop
+        log.append([1], [2], delete=True)
+        log.seal_batch()
+        log.append([7], [8])
+        log.seal_batch()
+        log.seal_batch()                            # empty batch is legal
+        assert reader.poll() == 3
+        b0 = reader.read_batch()
+        # canonical_slots: both directions, loop dropped, dup kept raw
+        assert _canonical_pairs(b0.ins_src, b0.ins_dst) == {(0, 5)}
+        assert _canonical_pairs(b0.del_src, b0.del_dst) == {(1, 2)}
+        b1 = reader.read_batch(chunk_slots=1)       # bounded-chunk reads
+        assert _canonical_pairs(b1.ins_src, b1.ins_dst) == {(7, 8)}
+        assert reader.read_batch().n_raw == 0
+        assert reader.poll() == 0
+
+
+def test_editlog_torn_frame_is_not_sealed(tmp_path):
+    with EditLog(str(tmp_path / "log")) as log:
+        log.append([0], [1])
+        log.seal_batch()
+        reader = EditLogReader(log.workdir)
+        # A half-written trailing frame (one int64 of two) must be ignored.
+        with open(log.frames_path, "ab") as f:
+            np.array([99], dtype=np.int64).tofile(f)
+        assert reader.poll() == 1
+        assert reader.read_batch() is not None
+        assert reader.read_batch() is None
+
+
+def test_editlog_feeds_apply_updates(tmp_path):
+    g = rmat(9, 6, seed=4)
+    core = peel_coreness(g).astype(np.int32)
+    rng = np.random.default_rng(2)
+    with EditLog(str(tmp_path / "log")) as log:
+        for _ in range(4):
+            log.append(rng.integers(0, g.n_nodes, 2),
+                       rng.integers(0, g.n_nodes, 2))
+            log.seal_batch()
+        reader = EditLogReader(log.workdir)
+        while (batch := reader.read_batch()) is not None:
+            res = apply_updates(g, core, batch, op="count")
+            g, core = res.graph, res.coreness
+    assert np.array_equal(core, peel_coreness(g))
+
+
+# ---------------------------------------------------------------------------
+# The counterexample that forces the fall-region flood
+# ---------------------------------------------------------------------------
+
+def test_triangle_delete_third_corner_must_fall():
+    """Delete one edge of a triangle: both endpoints' seeds start AT their
+    final value (no sweep-time change event ever fires), so the third
+    corner — whose coreness must drop 2 -> 1 — is only reached because the
+    fall region is flooded into the initial frontier. A dirty-propagation-
+    only scheme returns stale coreness here."""
+    g = Graph.from_edges(np.array([0, 1, 2]), np.array([1, 2, 0]), n_nodes=3)
+    core = peel_coreness(g)
+    assert core.tolist() == [2, 2, 2]
+    res = apply_updates(g, core, EdgeEdits.deletes([0], [1]),
+                        op="count", dirty_budget_frac=1.0)
+    assert res.mode == "incremental"
+    assert res.coreness.tolist() == [1, 1, 1]
+    assert bool(res.dirty_mask[2]), "third corner must be in the fall region"
+
+
+# ---------------------------------------------------------------------------
+# Churn streams: bit-identity on every fixture family
+# ---------------------------------------------------------------------------
+
+def test_churn_heavy_tailed_unit_edits():
+    modes = _run_churn(rmat(10, 8, seed=7), 12, seed=11)
+    # Heavy-tailed coreness keeps subcores local: the incremental path must
+    # actually be exercised, not just fall back every time.
+    assert modes.get("incremental", 0) >= 8, modes
+
+
+def test_churn_heavy_tailed_batches():
+    _run_churn(rmat(10, 8, seed=3), 8, seed=13, batch_hi=4)
+
+
+def test_churn_er():
+    _run_churn(erdos_renyi(400, 6.0, seed=3), 8, seed=5, batch_hi=2)
+
+
+def test_churn_ba_uniform_coreness_falls_back():
+    # BA graphs have near-uniform coreness (= m): the equal-coreness
+    # subcore IS the graph, so the engine must detect the explosion and
+    # take the full-resweep fallback — still bit-identical.
+    modes = _run_churn(barabasi_albert(600, 4, seed=7), 6, seed=9)
+    assert modes.get("incremental", 0) <= modes.get("full", 0) + 1, modes
+
+
+def test_churn_sorted_engine():
+    _run_churn(rmat(9, 6, seed=5), 5, seed=17, op="sorted")
+
+
+def test_insert_only_and_delete_only_streams():
+    g = rmat(9, 8, seed=8)
+    core = peel_coreness(g).astype(np.int32)
+    rng = np.random.default_rng(4)
+    for _ in range(5):
+        res = apply_updates(g, core, _random_batch(rng, g, 2, 0), op="count")
+        g, core = res.graph, res.coreness
+        assert np.array_equal(core, peel_coreness(g))
+    for _ in range(5):
+        res = apply_updates(g, core, _random_batch(rng, g, 0, 2), op="count")
+        g, core = res.graph, res.coreness
+        assert np.array_equal(core, peel_coreness(g))
+
+
+def test_new_nodes_enter_through_inserts():
+    g = Graph.from_edges(np.array([0, 1]), np.array([1, 2]), n_nodes=3)
+    core = peel_coreness(g)
+    res = apply_updates(g, core, EdgeEdits.inserts([2, 3, 4], [3, 4, 5]),
+                        op="count", dirty_budget_frac=1.0)
+    assert res.graph.n_nodes == 6
+    assert np.array_equal(res.coreness, peel_coreness(res.graph))
+
+
+# ---------------------------------------------------------------------------
+# Dirty-region bounds + fallback behavior
+# ---------------------------------------------------------------------------
+
+def test_dirty_region_covers_all_movers_and_bounds_work():
+    g = rmat(10, 8, seed=7)
+    core = peel_coreness(g).astype(np.int32)
+    full_rows = sum(
+        decompose(bucketize(g), op="count").active_rows_per_iter
+    )
+    rng = np.random.default_rng(21)
+    saw_incremental = False
+    for _ in range(10):
+        old_core = core.copy()
+        res = apply_updates(g, core, _random_batch(rng, g, 1, 0), op="count")
+        g, core = res.graph, res.coreness
+        if res.mode != "incremental":
+            continue
+        saw_incremental = True
+        # Soundness: every node whose coreness moved is in the seed region.
+        moved = np.nonzero(core[: old_core.size] != old_core)[0]
+        assert np.all(res.dirty_mask[moved]), "mover outside dirty region"
+        # Locality: the restricted re-sweep gathers (far) fewer rows than
+        # one full from-scratch run on a unit edit.
+        assert res.dirty_count == int(res.dirty_mask.sum())
+        assert res.dirty_frac <= 0.5
+        assert res.gathered_rows < full_rows
+    assert saw_incremental
+
+
+def test_fallback_budget_zero_forces_full_mode():
+    g = rmat(9, 6, seed=2)
+    core = peel_coreness(g)
+    u = 0
+    v = next(x for x in range(1, g.n_nodes)
+             if x not in set(g.neighbors(u).tolist()))
+    res = apply_updates(g, core, EdgeEdits.inserts([u], [v]),
+                        op="count", dirty_budget_frac=0.0)
+    assert res.mode == "full"
+    assert bool(res.dirty_mask.all())
+    assert np.array_equal(res.coreness, peel_coreness(res.graph))
+
+
+def test_noop_batch():
+    g = rmat(8, 6, seed=2)
+    core = peel_coreness(g)
+    res = apply_updates(g, core, EdgeEdits.of(), op="count")
+    assert res.mode == "noop"
+    assert res.gathered_rows == 0
+    assert np.array_equal(res.coreness, core)
+    assert res.graph is not g or True  # graph object passthrough is fine
+
+
+def test_apply_updates_validates_coreness_shape():
+    g = rmat(8, 6, seed=2)
+    with pytest.raises(ValueError, match="coreness shape"):
+        apply_updates(g, np.zeros(3, np.int32), EdgeEdits.of())
+
+
+# ---------------------------------------------------------------------------
+# decompose(seed_nodes=...) — the engine hook the tentpole rides on
+# ---------------------------------------------------------------------------
+
+def test_seed_nodes_requires_frontier():
+    bg = bucketize(rmat(8, 6, seed=1))
+    with pytest.raises(ValueError, match="frontier"):
+        decompose(bg, seed_nodes=np.ones(bg.n_nodes, bool), frontier=False)
+
+
+def test_seed_nodes_full_mask_matches_unrestricted():
+    g = rmat(9, 8, seed=6)
+    bg = bucketize(g)
+    ref = decompose(bg, op="count")
+    res = decompose(bg, op="count", seed_nodes=np.ones(g.n_nodes, bool))
+    assert np.array_equal(res.coreness, ref.coreness)
+
+
+@pytest.mark.parametrize("order", ["bfs", "rcm"])
+def test_seed_nodes_maps_through_reordering(order):
+    """Seeds are original ids; a wrong perm mapping would activate the
+    wrong buckets and leave the planted inflated estimates standing."""
+    from repro.graph.reorder import reorder_graph
+
+    g = rmat(9, 8, seed=6)
+    oracle = peel_coreness(g)
+    rng = np.random.default_rng(0)
+    # Degree-0 rows own no bucket and are never swept; an inflated seed
+    # there could never be corrected (apply_updates clamps est to the new
+    # degree for exactly this reason) — plant on real rows only.
+    candidates = np.nonzero(g.degrees > 0)[0]
+    planted = rng.choice(candidates, size=12, replace=False)
+    est = oracle.astype(np.int32).copy()
+    est[planted] += 1  # valid upper bound, wrong by 1 at the seeds
+    bg = bucketize(reorder_graph(g, order))
+    res = decompose(bg, op="count", init_coreness=est,
+                    seed_nodes=planted.astype(np.int64))
+    assert np.array_equal(res.coreness, oracle)
+
+
+# ---------------------------------------------------------------------------
+# Properties (hypothesis when installed + always-on seeded ports)
+# ---------------------------------------------------------------------------
+
+def _property_case(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 40))
+    m = int(rng.integers(0, 4 * n))
+    g = Graph.from_edges(rng.integers(0, n, m), rng.integers(0, n, m),
+                         n_nodes=n)
+    core = peel_coreness(g).astype(np.int32)
+    for _ in range(3):
+        k = int(rng.integers(0, 5))
+        kd = int(rng.integers(0, 5))
+        edits = EdgeEdits.of(rng.integers(0, n, k), rng.integers(0, n, k),
+                             rng.integers(0, n, kd), rng.integers(0, n, kd))
+        budget = float(rng.choice([0.0, 0.5, 1.0]))
+        res = apply_updates(g, core, edits, op="count",
+                            dirty_budget_frac=budget)
+        g, core = res.graph, res.coreness
+        assert np.array_equal(core, peel_coreness(g)), res.mode
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_property_seeded_ports(seed):
+    _property_case(seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_property_hypothesis(seed):
+        _property_case(seed)

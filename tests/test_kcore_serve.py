@@ -1,0 +1,180 @@
+"""Serving-layer tests: snapshot publication, torn-state safety, CLI.
+
+The publish/swap ordering contract under test: a snapshot is built
+COMPLETELY (fresh read-only arrays, checksum stamped) before the single
+reference assignment that publishes it, so a reader that grabbed the front
+pointer at any instant — including mid-swap — holds a self-consistent
+object. The torn-state test hammers queries from reader threads while a
+writer republishes as fast as it can, and every observed snapshot must
+self-verify and carry a non-decreasing version.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.snapshot_pub import CorenessSnapshot, SnapshotPublisher
+from repro.graph.editlog import EditLog
+from repro.graph.generators import rmat
+from repro.graph.oracle import peel_coreness, peel_kcore_mask
+
+
+@pytest.fixture(scope="module")
+def served_graph():
+    g = rmat(9, 8, seed=6)
+    return g, peel_coreness(g).astype(np.int32)
+
+
+def test_queries_match_oracle(served_graph):
+    g, core = served_graph
+    pub = SnapshotPublisher()
+    pub.publish(g, core)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(-5, g.n_nodes + 5, 64)
+    got = pub.query_coreness(ids)
+    ok = (ids >= 0) & (ids < g.n_nodes)
+    assert np.array_equal(got[ok], core[ids[ok]])
+    assert np.all(got[~ok] == 0)
+
+    for k in (1, 2, int(core.max())):
+        members = pub.query_kcore_members(k)
+        assert np.array_equal(members, np.nonzero(peel_kcore_mask(g, k))[0])
+        flags = pub.query_in_kcore(ids, k)
+        assert np.array_equal(flags[ok], core[ids[ok]] >= k)
+        assert not flags[~ok].any()
+
+    k_max, top = pub.query_top_kcore()
+    assert k_max == int(core.max())
+    assert np.array_equal(top, np.nonzero(core >= k_max)[0])
+
+
+def test_snapshot_is_immutable_and_detached(served_graph):
+    g, core = served_graph
+    pub = SnapshotPublisher()
+    scratch = core.copy()
+    snap = pub.publish(g, scratch)
+    scratch[:] = -1  # the caller may reuse its buffer after publish
+    assert np.array_equal(snap.coreness, core)
+    with pytest.raises(ValueError):
+        snap.coreness[0] = 7
+    assert snap.verify()
+
+
+def test_query_before_first_publish_raises():
+    pub = SnapshotPublisher()
+    assert pub.snapshot is None
+    with pytest.raises(RuntimeError, match="no snapshot"):
+        pub.query_coreness([0])
+
+
+def test_checksum_detects_torn_payload(served_graph):
+    g, core = served_graph
+    snap = SnapshotPublisher().publish(g, core)
+    mixed = core.copy()
+    mixed[0] += 1  # one element from "another version"
+    torn = CorenessSnapshot(graph=g, coreness=mixed, version=snap.version,
+                            checksum=snap.checksum,
+                            published_at=snap.published_at)
+    assert snap.verify() and not torn.verify()
+
+
+def test_swap_never_observes_torn_state(served_graph):
+    g, core = served_graph
+    pub = SnapshotPublisher()
+    pub.publish(g, core)
+    stop = threading.Event()
+    failures = []
+
+    def writer():
+        rng = np.random.default_rng(1)
+        for _ in range(300):
+            # Distinct payload every publish: a torn read WOULD mismatch.
+            delta = rng.integers(0, 3, core.size).astype(np.int32)
+            pub.publish(g, core + delta, n_edits=1)
+        stop.set()
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        last_version = 0
+        while not stop.is_set() or rng.random() < 0.5:
+            snap = pub.snapshot
+            if not snap.verify():
+                failures.append(("torn", snap.version))
+                return
+            if snap.version < last_version:
+                failures.append(("version went backwards", snap.version))
+                return
+            last_version = snap.version
+            ids = rng.integers(0, g.n_nodes, 32)
+            got = pub.query_coreness(ids)
+            if got.size != 32:
+                failures.append(("bad shape", snap.version))
+                return
+            if stop.is_set():
+                return
+
+    threads = [threading.Thread(target=writer, name="kcore-serve-test-w")]
+    threads += [
+        threading.Thread(target=reader, args=(s,), name="kcore-serve-test-r")
+        for s in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not failures, failures
+    assert pub.metrics()["n_publishes"] == 301
+
+
+def test_metrics_shape(served_graph):
+    g, core = served_graph
+    pub = SnapshotPublisher()
+    pub.note_pending(7)
+    pub.publish(g, core, n_edits=5)
+    for _ in range(20):
+        pub.query_coreness([0, 1, 2])
+    m = pub.metrics()
+    assert m["n_publishes"] == 1
+    assert m["n_edits_published"] == 5
+    assert m["pending_edits"] == 2  # 7 noted - 5 folded in
+    assert m["n_queries"] == 20
+    assert 0.0 <= m["query_p50_ms"] <= m["query_p99_ms"]
+    assert m["updates_per_s"] > 0
+    assert m["staleness_mean_edits"] == 2.0
+
+
+def test_serve_cli_end_to_end(tmp_path):
+    from repro.launch.kcore_serve import main
+
+    rng = np.random.default_rng(5)
+    n = 2 ** 8
+    with EditLog(str(tmp_path / "log")) as log:
+        for _ in range(5):
+            log.append(rng.integers(0, n, 2), rng.integers(0, n, 2))
+            log.append(rng.integers(0, n, 1), rng.integers(0, n, 1),
+                       delete=True)
+            log.seal_batch()
+        m = main(["--graph", "rmat:8:4", "--edit-log", log.workdir,
+                  "--engine", "count", "--max-batches", "5",
+                  "--query-batch", "16", "--json"])
+    assert m["batches_drained"] == 5
+    assert m["pending_edits"] == 0
+    assert m["n_publishes"] == 6  # boot + one per batch
+    assert m["n_queries"] > 0
+    assert 0.0 <= m["query_p50_ms"] <= m["query_p99_ms"]
+    # The update worker (kcore-serve-update) must be joined on exit — the
+    # conftest leak gate fails this test otherwise.
+
+
+def test_serve_cli_idle_timeout_exit(tmp_path):
+    from repro.launch.kcore_serve import main
+
+    with EditLog(str(tmp_path / "log")) as log:
+        log.append([0], [1])
+        log.seal_batch()
+        m = main(["--graph", "rmat:8:4", "--edit-log", log.workdir,
+                  "--engine", "count", "--idle-timeout-s", "0.2",
+                  "--json"])
+    assert m["batches_drained"] == 1

@@ -1,0 +1,200 @@
+"""Regression tests for the timer/bugfix satellites.
+
+- Duration accounting must use the monotonic ``time.perf_counter``: an NTP
+  step (modeled here as a ``time.time`` that runs BACKWARDS) must not
+  produce negative ``idle_fraction``/``save_wall_s`` or out-of-range
+  utilization.
+- ``SweepSnapshot.restore`` must log a one-line warning (path + reason)
+  when it silently degrades to part-boundary resume.
+- ``run_with_capacity_replan`` must respond to ``SliceCapacityError`` by
+  re-dividing with smaller parts, not aborting — including the planted
+  oversized-part integration case from the acceptance criteria.
+"""
+from __future__ import annotations
+
+import logging
+import time
+
+import numpy as np
+import pytest
+
+import repro.ckpt as ckpt_mod
+from repro.core.decompose import decompose
+from repro.core.dckcore import SweepSnapshot, dc_kcore
+from repro.core.divide import plan_thresholds
+from repro.core.partsched import SliceCapacityError
+from repro.graph.build import bucketize
+from repro.graph.generators import rmat
+from repro.launch.kcore import run_with_capacity_replan
+
+
+@pytest.fixture
+def clock_stepping_backwards(monkeypatch):
+    """time.time() that loses ~1s per call — the NTP-step nightmare.
+
+    perf_counter is left alone (it is monotonic by contract); any duration
+    still measured off the wall clock goes negative and trips the
+    invariant assertions below.
+    """
+    start = time.time()
+    calls = [0]
+
+    def broken_time():
+        calls[0] += 1
+        return start - calls[0]
+
+    monkeypatch.setattr(time, "time", broken_time)
+    return calls
+
+
+def test_decompose_wall_time_survives_wall_clock_step(
+    clock_stepping_backwards,
+):
+    res = decompose(bucketize(rmat(8, 6, seed=1)), op="count")
+    assert res.wall_time_s >= 0
+
+
+def test_report_invariants_survive_wall_clock_step(
+    tmp_path, clock_stepping_backwards
+):
+    g = rmat(9, 6, seed=3)
+    core, report = dc_kcore(
+        g, thresholds=[8], engine="count",
+        checkpoint_dir=str(tmp_path / "ck"), sweep_checkpoint_every=2,
+    )
+    assert 0.0 <= report.idle_fraction <= 1.0
+    assert report.total_time_s >= 0
+    assert report.total_decompose_time_s >= 0
+    assert report.preprocess_time_s >= 0
+    assert report.total_save_time_s >= 0
+    assert report.total_save_wall_s >= 0
+    for p in report.parts:
+        assert p.save_time_s >= 0
+        assert p.save_wall_s >= 0
+    from repro.graph.oracle import peel_coreness
+
+    assert np.array_equal(core, peel_coreness(g))
+
+
+def test_report_invariants_overlap_mode(tmp_path, clock_stepping_backwards):
+    g = rmat(9, 6, seed=3)
+    _, report = dc_kcore(
+        g, thresholds=[8], engine="count", overlap=True,
+        checkpoint_dir=str(tmp_path / "ck"),
+    )
+    assert 0.0 <= report.idle_fraction <= 1.0
+    assert report.total_save_wall_s >= 0
+
+
+# ---------------------------------------------------------------------------
+# SweepSnapshot.restore degradation warnings
+# ---------------------------------------------------------------------------
+
+def test_restore_warns_on_unreadable_snapshot(monkeypatch, caplog, tmp_path):
+    sweep_dir = str(tmp_path / "sweep")
+    monkeypatch.setattr(ckpt_mod, "latest_step", lambda d: 3)
+
+    def boom(*args, **kwargs):
+        raise IOError("truncated payload")
+
+    monkeypatch.setattr(ckpt_mod, "restore_pytree", boom)
+    with caplog.at_level(logging.WARNING, logger="repro.core.dckcore"):
+        assert SweepSnapshot.restore(sweep_dir) is None
+    assert "unreadable" in caplog.text
+    assert sweep_dir in caplog.text
+    assert "truncated payload" in caplog.text
+
+
+def test_restore_warns_on_format_mismatch(monkeypatch, caplog, tmp_path):
+    sweep_dir = str(tmp_path / "sweep")
+    monkeypatch.setattr(ckpt_mod, "latest_step", lambda d: 3)
+    monkeypatch.setattr(
+        ckpt_mod, "restore_pytree",
+        lambda *a, **k: (
+            {"part_coreness": np.zeros(4, np.int32)}, 3, {"format": "bogus"}
+        ),
+    )
+    with caplog.at_level(logging.WARNING, logger="repro.core.dckcore"):
+        assert SweepSnapshot.restore(sweep_dir) is None
+    assert "bogus" in caplog.text
+    assert sweep_dir in caplog.text
+
+
+def test_restore_silent_when_no_snapshot(monkeypatch, caplog, tmp_path):
+    # Nothing saved yet is the normal case — no warning noise.
+    with caplog.at_level(logging.WARNING, logger="repro.core.dckcore"):
+        assert SweepSnapshot.restore(str(tmp_path / "empty")) is None
+    assert caplog.text == ""
+
+
+# ---------------------------------------------------------------------------
+# Capacity wiring: SliceCapacityError -> re-divide, not abort
+# ---------------------------------------------------------------------------
+
+def test_replan_helper_retries_with_smaller_parts_and_no_resume():
+    g = rmat(10, 8, seed=0)
+    calls = []
+
+    def fake_dc(graph, thresholds, **kw):
+        calls.append((tuple(thresholds), kw.get("resume")))
+        if len(calls) == 1:
+            raise SliceCapacityError("planted oversized part")
+        return "core", "report"
+
+    core, report, th, n_replans = run_with_capacity_replan(
+        g, [], replan_budget_bytes=80_000, dc=fake_dc, resume=True,
+    )
+    assert (core, report) == ("core", "report")
+    assert n_replans == 1
+    assert calls[0] == ((), True)
+    # Retry re-divided at the halved budget with a doubled part allowance,
+    # and forced resume off (the aborted attempt's checkpoints describe a
+    # different partition).
+    expected = tuple(plan_thresholds(g.degrees, 40_000, max_parts=16))
+    assert calls[1] == (expected, False)
+    assert list(th) == list(expected)
+
+
+def test_replan_helper_reraises_without_budget():
+    g = rmat(9, 6, seed=0)
+    calls = []
+
+    def fake_dc(graph, thresholds, **kw):
+        calls.append(1)
+        raise SliceCapacityError("no budget to replan from")
+
+    with pytest.raises(SliceCapacityError):
+        run_with_capacity_replan(g, [], replan_budget_bytes=None, dc=fake_dc)
+    assert len(calls) == 1
+
+
+def test_replan_helper_gives_up_after_max_replans():
+    g = rmat(9, 6, seed=0)
+    calls = []
+
+    def fake_dc(graph, thresholds, **kw):
+        calls.append(1)
+        raise SliceCapacityError("hopeless")
+
+    with pytest.raises(SliceCapacityError):
+        run_with_capacity_replan(
+            g, [], replan_budget_bytes=1 << 30, max_replans=2, dc=fake_dc,
+        )
+    assert len(calls) == 3  # initial + 2 replans
+
+
+def test_planted_oversized_part_triggers_redivide_not_abort():
+    """Acceptance case: a monolithic plan whose one part exceeds every
+    slice's capacity must converge through re-divides to a completed,
+    oracle-consistent run."""
+    from repro.graph.oracle import peel_coreness
+
+    g = rmat(10, 8, seed=0)
+    core, report, thresholds, n_replans = run_with_capacity_replan(
+        g, [], replan_budget_bytes=120_000, engine="count",
+        part_parallel=2, slice_capacity_bytes=60_000,
+    )
+    assert n_replans >= 1, "the planted part must actually trip capacity"
+    assert len(thresholds) > 0, "re-divide must have split the graph"
+    assert np.array_equal(core, peel_coreness(g))
+    assert report.part_parallel == 2
