@@ -2,21 +2,32 @@
 
 Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf (path-
 encoded filename) plus ``manifest.json`` (tree structure, shapes, dtypes,
-step). Writes go to ``step_<N>.tmp`` and are renamed only when complete, so
-a killed run never leaves a half checkpoint (the fault-injection test kills
-mid-run and restarts).
+per-leaf CRC32, step). Writes go to ``step_<N>.tmp`` and are renamed only
+when complete, so a killed run never leaves a half checkpoint (the
+fault-injection test kills mid-run and restarts).
+
+Integrity: ``save_pytree`` stamps a CRC32 per leaf into the manifest and
+``restore_pytree`` re-checks it on load — bit rot, truncation or an
+unreadable manifest raise the typed :class:`CheckpointCorruptError`
+instead of a raw numpy/json error. ``restore_pytree_with_fallback``
+implements the recovery discipline: quarantine the corrupt step (rename
+to ``step_<N>.corrupt`` for postmortem), fall back to the next-newest
+retained step, and only give up when none is left.
 
 Checkpoints store *global* host arrays, not device layouts, so restore can
 re-shard onto a different mesh (elastic scaling: the 8->4 device test).
 ``CheckpointManager`` adds async saves (a background thread overlaps
-serialization with compute) and retention, with the ordering contract the
-overlapped DC-kCore pipeline leans on:
+serialization with compute) and retention (``retain=`` newest steps kept,
+default 2 so a corrupted latest still has a fallback), with the ordering
+contract the overlapped DC-kCore pipeline leans on:
 
 * an async ``save`` snapshots the tree **by value** before returning, so
   the caller may keep mutating its arrays while the write is in flight;
 * at most one save is ever in flight per manager (a new ``save`` first
-  waits out the previous one), and a worker failure is re-raised on the
-  next ``wait()``/``save`` instead of dying silently in the thread;
+  waits out the previous one — callers from different threads are
+  serialized by a lock), and a worker failure is re-raised on the next
+  ``wait()``/``save()``/``clear_steps()`` instead of dying silently in
+  the thread;
 * ``clear_steps`` (the purge path) waits out the pending save before
   removing anything — write-then-rename ordering means a save enqueued
   before a purge is either fully on disk (and then removed) or was never
@@ -28,20 +39,33 @@ overlapped DC-kCore pipeline leans on:
 from __future__ import annotations
 
 import json
+import logging
 import os
 import re
 import shutil
 import threading
 import time
+import zlib
 from typing import Callable, Optional
 
 import jax
 import ml_dtypes
 import numpy as np
 
+logger = logging.getLogger(__name__)
+
 # Worker threads of in-flight async saves carry this name prefix; the test
 # suite asserts none outlive a test (a leaked thread = a missing wait()).
 SAVE_THREAD_PREFIX = "ckpt-save"
+
+# Default retention: the newest step plus one predecessor, so a corrupted
+# latest step can fall back instead of restarting from scratch.
+DEFAULT_RETAIN = 2
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint step failed integrity checks (CRC mismatch, unreadable
+    leaf file, or a missing/undecodable manifest)."""
 
 
 def _dtype_from_name(name: str) -> np.dtype:
@@ -69,6 +93,12 @@ def _leaf_files(tree) -> list:
     return out, leaves, treedef
 
 
+def _leaf_crc32(arr: np.ndarray) -> int:
+    """CRC32 over the leaf's raw bytes (dtype-view agnostic: computed on
+    the array exactly as serialized, before any ml_dtypes re-view)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save_pytree(path: str, tree, step: int, extra: Optional[dict] = None) -> str:
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -77,14 +107,17 @@ def save_pytree(path: str, tree, step: int, extra: Optional[dict] = None) -> str
     os.makedirs(tmp, exist_ok=True)
     files, leaves, treedef = _leaf_files(tree)
     dtypes = []
+    crcs = []
     for fname, leaf in zip(files, leaves):
         arr = np.asarray(leaf)
         dtypes.append(arr.dtype.name)
+        crcs.append(_leaf_crc32(arr))
         np.save(os.path.join(tmp, fname), arr)
     manifest = {
         "step": step,
         "files": files,
         "dtypes": dtypes,
+        "crc32": crcs,
         "treedef": str(treedef),
         "extra": extra or {},
     }
@@ -111,19 +144,39 @@ def restore_pytree(path: str, like, step: Optional[int] = None, shardings=None):
     """Restore into the structure of ``like`` (params/state template).
 
     ``shardings``: optional NamedSharding tree — arrays are device_put with
-    it, which is how an elastic restart re-shards onto a new mesh."""
+    it, which is how an elastic restart re-shards onto a new mesh.
+
+    Integrity failures (unreadable manifest, unloadable leaf, CRC
+    mismatch) raise :class:`CheckpointCorruptError`; a structure mismatch
+    against ``like`` is a caller error and still asserts."""
     if step is None:
         step = latest_step(path)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {path}")
     d = os.path.join(path, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest in {d}: {type(e).__name__}: {e}"
+        ) from e
     files, _leaves, treedef = _leaf_files(like)
     assert files == manifest["files"], "checkpoint/template structure mismatch"
+    # Pre-CRC checkpoints (older layout) carry no crc32 list — load as-is.
+    crcs = manifest.get("crc32") or [None] * len(files)
     arrays = []
-    for fname, dtype_name in zip(files, manifest["dtypes"]):
-        arr = np.load(os.path.join(d, fname))
+    for fname, dtype_name, want_crc in zip(files, manifest["dtypes"], crcs):
+        try:
+            arr = np.load(os.path.join(d, fname))
+        except Exception as e:  # noqa: BLE001 — any load failure = corrupt
+            raise CheckpointCorruptError(
+                f"unreadable leaf {fname} in {d}: {type(e).__name__}: {e}"
+            ) from e
+        if want_crc is not None and _leaf_crc32(arr) != want_crc:
+            raise CheckpointCorruptError(
+                f"CRC mismatch for leaf {fname} in {d} (bit rot or torn write)"
+            )
         want = _dtype_from_name(dtype_name)
         if arr.dtype != want:  # np.save stores ml_dtypes as raw void
             arr = arr.view(want)
@@ -134,14 +187,70 @@ def restore_pytree(path: str, like, step: Optional[int] = None, shardings=None):
     return tree, step, manifest["extra"]
 
 
-class CheckpointManager:
-    """Async saves + retention (one save in flight at a time)."""
+def quarantine_step(path: str, step: int) -> str:
+    """Rename ``step_<N>`` to ``step_<N>.corrupt`` (kept for postmortem).
 
-    def __init__(self, path: str, keep: int = 3):
+    The quarantined dir no longer matches the step regex, so
+    :func:`latest_step`, retention GC and restore all skip it; purge paths
+    (``clear_steps``) still remove it."""
+    d = os.path.join(path, f"step_{step:08d}")
+    q = d + ".corrupt"
+    if os.path.isdir(q):
+        shutil.rmtree(q, ignore_errors=True)
+    os.replace(d, q)
+    return q
+
+
+def restore_pytree_with_fallback(
+    path: str,
+    like,
+    shardings=None,
+    on_corrupt: Optional[Callable[[int, "CheckpointCorruptError"], None]] = None,
+):
+    """Restore the newest step that passes integrity checks.
+
+    A corrupt step is quarantined (renamed ``.corrupt``), ``on_corrupt``
+    is notified, and the next-newest retained step is tried — the same
+    fallback discipline ``SweepSnapshot.restore`` uses for stale
+    snapshots. Raises ``FileNotFoundError`` when no intact step remains
+    (callers fall back to the part boundary / a fresh run)."""
+    while True:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no intact checkpoints under {path}")
+        try:
+            return restore_pytree(path, like, step=step, shardings=shardings)
+        except CheckpointCorruptError as exc:
+            q = quarantine_step(path, step)
+            logger.warning(
+                "checkpoint step %d corrupt (%s) — quarantined to %s, "
+                "falling back to previous retained step", step, exc, q,
+            )
+            if on_corrupt is not None:
+                on_corrupt(step, exc)
+
+
+class CheckpointManager:
+    """Async saves + retention (one save in flight at a time).
+
+    ``retain`` is the number of newest steps kept by the post-save GC
+    (``keep`` is the legacy alias); the default of 2 means a corrupted
+    latest step can always fall back to its predecessor. Save/wait/purge
+    entry points are serialized by a lock, so concurrent callers (e.g. a
+    retried lead part racing an abandoned hung attempt) never interleave
+    two in-flight saves.
+    """
+
+    def __init__(self, path: str, keep: Optional[int] = None,
+                 retain: Optional[int] = None):
+        if retain is None:
+            retain = keep if keep is not None else DEFAULT_RETAIN
         self.path = path
-        self.keep = keep
+        self.retain = retain
+        self.keep = retain  # legacy alias, kept in sync
         self._pending: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._lock = threading.RLock()
         # Wall seconds of the last COMPLETED save (write + rename + GC) —
         # the honest cost of persisting, as opposed to the time save()'s
         # caller was blocked, which is near zero on the async path.
@@ -164,61 +273,70 @@ class CheckpointManager:
         moment this returns — the write works from the copy); the completed
         write's own duration lands in ``last_save_seconds`` and is passed to
         ``on_done(step, seconds)``, called from the worker thread after the
-        atomic rename and retention GC. ``on_done`` must not raise.
+        atomic rename and retention GC. An ``on_done`` failure is captured
+        like a write failure and re-raised on the next entry point.
+
+        A failure of the *previous* async save surfaces here (and on
+        ``clear_steps()``), not only on ``wait()`` — an early crash can't
+        be masked until the final drain.
         """
-        t_blocked = time.perf_counter()
-        self.wait()
-        if blocking:
-            host_tree = jax.tree.map(np.asarray, tree)
-        else:
-            host_tree = jax.tree.map(lambda x: np.array(x, copy=True), tree)
+        with self._lock:
+            t_blocked = time.perf_counter()
+            self.wait()
+            if blocking:
+                host_tree = jax.tree.map(np.asarray, tree)
+            else:
+                host_tree = jax.tree.map(lambda x: np.array(x, copy=True), tree)
 
-        def work():
-            t0 = time.perf_counter()
-            try:
-                save_pytree(self.path, host_tree, step, extra)
-                self._gc()
-            except BaseException as e:  # surfaced on the next wait()
-                self._error = e
-                return
-            self.last_save_seconds = time.perf_counter() - t0
-            if on_done is not None:
-                on_done(step, self.last_save_seconds)
+            def work():
+                t0 = time.perf_counter()
+                try:
+                    save_pytree(self.path, host_tree, step, extra)
+                    self._gc()
+                    self.last_save_seconds = time.perf_counter() - t0
+                    if on_done is not None:
+                        on_done(step, self.last_save_seconds)
+                except BaseException as e:  # surfaced on the next entry point
+                    self._error = e
 
-        if blocking:
-            work()
-            self.wait()  # re-raise a failure immediately on the blocking path
-        else:
-            self._pending = threading.Thread(
-                target=work, daemon=True,
-                name=f"{SAVE_THREAD_PREFIX}:{os.path.basename(self.path)}:{step}",
-            )
-            self._pending.start()
-        return time.perf_counter() - t_blocked
+            if blocking:
+                work()
+                self.wait()  # re-raise a failure immediately on the blocking path
+            else:
+                self._pending = threading.Thread(
+                    target=work, daemon=True,
+                    name=f"{SAVE_THREAD_PREFIX}:{os.path.basename(self.path)}:{step}",
+                )
+                self._pending.start()
+            return time.perf_counter() - t_blocked
 
     def wait(self):
         """Join the in-flight save, re-raising any failure it hit."""
-        if self._pending is not None:
-            self._pending.join()
-            self._pending = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        with self._lock:
+            if self._pending is not None:
+                self._pending.join()
+                self._pending = None
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
 
     def clear_steps(self):
-        """Remove every step dir (and half-written ``.tmp``) under ``path``.
+        """Remove every step dir (``.tmp`` and quarantined ``.corrupt``
+        included) under ``path``.
 
-        Waits out the pending async save first: write-then-rename ordering
-        means a save enqueued before this purge is fully on disk — and then
-        removed — never torn, and the purge can never rmtree a ``.tmp`` the
-        worker is still filling (which would kill the save mid-write).
+        Waits out the pending async save first (re-raising its failure, if
+        any): write-then-rename ordering means a save enqueued before this
+        purge is fully on disk — and then removed — never torn, and the
+        purge can never rmtree a ``.tmp`` the worker is still filling
+        (which would kill the save mid-write).
         """
-        self.wait()
-        if not os.path.isdir(self.path):
-            return
-        for d in os.listdir(self.path):
-            if re.fullmatch(r"step_\d+(\.tmp)?", d):
-                shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)
+        with self._lock:
+            self.wait()
+            if not os.path.isdir(self.path):
+                return
+            for d in os.listdir(self.path):
+                if re.fullmatch(r"step_\d+(\.tmp|\.corrupt)?", d):
+                    shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)
 
     def _gc(self):
         steps = sorted(
@@ -226,5 +344,5 @@ class CheckpointManager:
             for d in os.listdir(self.path)
             if (m := re.fullmatch(r"step_(\d+)", d))
         )
-        for s in steps[: -self.keep]:
+        for s in steps[: -self.retain]:
             shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"), ignore_errors=True)

@@ -142,14 +142,15 @@ def graph_fingerprint(g: Graph) -> Dict[str, int]:
 
 
 def _clear_checkpoints(path: str) -> None:
-    """Remove every step dir (and half-written .tmp) under ``path`` — a
-    fresh run must not leave stale higher-numbered steps from a previous
-    run for a later ``resume=True`` to pick up. Only safe when no async
-    save targets ``path``; live managers purge via ``clear_steps``."""
+    """Remove every step dir (half-written ``.tmp`` and quarantined
+    ``.corrupt`` included) under ``path`` — a fresh run must not leave
+    stale higher-numbered steps from a previous run for a later
+    ``resume=True`` to pick up. Only safe when no async save targets
+    ``path``; live managers purge via ``clear_steps``."""
     if not os.path.isdir(path):
         return
     for d in os.listdir(path):
-        if re.fullmatch(r"step_\d+(\.tmp)?", d):
+        if re.fullmatch(r"step_\d+(\.tmp|\.corrupt)?", d):
             shutil.rmtree(os.path.join(path, d), ignore_errors=True)
 
 
@@ -203,6 +204,9 @@ class PartReport:
     slice_index: int = -1
     wave: int = -1
     modeled_cost_bytes: int = 0
+    # Failed conquer attempts of this part that were retried by the wave
+    # executor's fault-tolerance layer (0 on the fail-fast default path).
+    retries: int = 0
 
 
 @dataclasses.dataclass
@@ -224,6 +228,17 @@ class DCKCoreReport:
     slice_busy_s: List[float] = dataclasses.field(default_factory=list)
     speculation_discards: int = 0
     boundary_exchange_bytes: int = 0
+    # Fault-tolerance accounting (dc_kcore(slice_timeout_s=/max_retries=)):
+    # failed conquer attempts that were retried, slices blacklisted after
+    # exhausting their retries (or hanging past the watchdog timeout),
+    # waves that finished on fewer slices than planned, checkpoint steps
+    # quarantined as corrupt during restore, and the raw event log
+    # (retry/blacklist/replan/quarantine entries, in order).
+    retries: int = 0
+    blacklisted_slices: List[int] = dataclasses.field(default_factory=list)
+    degraded_waves: int = 0
+    quarantined_steps: int = 0
+    fault_events: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def total_comm(self) -> int:
@@ -364,16 +379,17 @@ class PipelineState:
         blocking manager is used. The previous in-flight save is waited
         out *before* ``extra()`` serializes the reports, so a pending
         ``on_done`` stamping the previous report's completed-save time
-        always lands first. Restore only ever reads the latest step, so
-        retention is ``keep=1``: earlier steps are pruned *after* the
-        atomic rename — disk stays bounded at one checkpoint (the state
-        arrays are O(n); at paper scale a P-part run must not hold P of
-        them). A crash between rename and prune leaves two steps; resume
-        still picks the newest."""
+        always lands first. Restore reads the newest step that passes
+        integrity checks, so retention is the manager's ``retain``
+        (default 2): the latest boundary plus one predecessor a corrupted
+        latest can fall back to — disk stays bounded at ``retain``
+        checkpoints (the state arrays are O(n); at paper scale a P-part
+        run must not hold P of them). A crash between rename and prune
+        leaves one extra step; resume still picks the newest intact."""
         from repro.ckpt import CheckpointManager
 
         if manager is None:
-            manager = CheckpointManager(checkpoint_dir, keep=1)
+            manager = CheckpointManager(checkpoint_dir)
             blocking = True
         t0 = time.perf_counter()
         manager.wait()
@@ -385,11 +401,16 @@ class PipelineState:
         return time.perf_counter() - t0
 
     @staticmethod
-    def restore(checkpoint_dir: str, n_nodes: int) -> Optional["PipelineState"]:
-        """Latest complete checkpoint under ``checkpoint_dir`` (``None`` if
+    def restore(checkpoint_dir: str, n_nodes: int,
+                events: Optional[List[dict]] = None) -> Optional["PipelineState"]:
+        """Latest *intact* checkpoint under ``checkpoint_dir`` (``None`` if
         there is none — half-written ``step_*.tmp`` dirs are ignored by
-        :func:`repro.ckpt.latest_step`)."""
-        from repro.ckpt import latest_step, restore_pytree
+        :func:`repro.ckpt.latest_step`). A corrupt step (CRC mismatch, bit
+        rot) is quarantined to ``step_*.corrupt`` and restore falls back
+        to the previous retained step; ``events`` (if given) collects one
+        ``{"event": "quarantine", ...}`` record per quarantined step for
+        the run report."""
+        from repro.ckpt import latest_step, restore_pytree_with_fallback
 
         if latest_step(checkpoint_dir) is None:
             return None
@@ -399,7 +420,22 @@ class PipelineState:
             "ext_remaining": np.zeros(0, np.int32),
             "remaining_ids": np.zeros(0, np.int64),
         }
-        arrays, _step, extra = restore_pytree(checkpoint_dir, template)
+
+        def on_corrupt(step, exc):
+            if events is not None:
+                events.append({
+                    "event": "quarantine", "path": checkpoint_dir,
+                    "step": int(step), "error": str(exc),
+                })
+
+        try:
+            arrays, _step, extra = restore_pytree_with_fallback(
+                checkpoint_dir, template, on_corrupt=on_corrupt
+            )
+        except FileNotFoundError:
+            # Every step was corrupt (all quarantined): resume from scratch
+            # — the part boundary discipline's last fallback.
+            return None
         if extra.get("format") != STATE_FORMAT:
             raise ValueError(
                 f"checkpoint format {extra.get('format')!r} != {STATE_FORMAT}"
@@ -441,7 +477,10 @@ class SweepSnapshot:
     :class:`PipelineState`, under ``<checkpoint_dir>/sweeps`` with the
     sweep number as the step (monotone across crash/resume cycles: a
     resumed part offsets its sweep numbering by the restored snapshot's),
-    retention one. A snapshot is only *valid* for the part it was taken in:
+    retention = the manager's ``retain`` (default 2, so a corrupt latest
+    snapshot falls back to its predecessor — any snapshot is a valid
+    upper bound, so an older one is merely a slower resume point, never a
+    wrong one). A snapshot is only *valid* for the part it was taken in:
     restore checks the pipeline cursor, graph fingerprint, threshold plan
     and part size, and anything stale — a snapshot from an already-finished
     part, another run, or a half-written ``.tmp`` — is ignored, falling
@@ -462,7 +501,7 @@ class SweepSnapshot:
     fingerprint: Dict[str, int]
 
     # Step numbering must be monotone across the WHOLE run, not just within
-    # a part: CheckpointManager(keep=1) retains the highest-numbered step,
+    # a part: the CheckpointManager retains the highest-numbered steps,
     # so if a later part's snapshots restarted at step 1, one stale
     # higher-numbered snapshot surviving a crash between a boundary save
     # and the sweeps purge would win the GC and silently swallow every new
@@ -489,7 +528,7 @@ class SweepSnapshot:
         from repro.ckpt import CheckpointManager
 
         if manager is None:
-            manager = CheckpointManager(sweep_dir, keep=1)
+            manager = CheckpointManager(sweep_dir)
             blocking = True
         t0 = time.perf_counter()
         extra = {
@@ -508,21 +547,37 @@ class SweepSnapshot:
         return time.perf_counter() - t0
 
     @staticmethod
-    def restore(sweep_dir: str) -> Optional["SweepSnapshot"]:
-        """Latest complete snapshot under ``sweep_dir``; ``None`` when there
+    def restore(sweep_dir: str,
+                events: Optional[List[dict]] = None) -> Optional["SweepSnapshot"]:
+        """Latest intact snapshot under ``sweep_dir``; ``None`` when there
         is none or it is unreadable/from another format — sweep snapshots
         are an optimization, so a bad one degrades to part-boundary resume
-        instead of failing the run. The degradation is logged (one line,
-        path + reason) so a resume that unexpectedly fell back to the part
-        boundary is diagnosable."""
-        from repro.ckpt import latest_step, restore_pytree
+        instead of failing the run. A *corrupt* snapshot (CRC mismatch) is
+        quarantined to ``.corrupt`` and the previous retained one is tried
+        first — any snapshot is a valid upper bound, so falling back one
+        step is still an exact resume point. The degradation is logged
+        (one line, path + reason) so a resume that unexpectedly fell back
+        to the part boundary is diagnosable; ``events`` collects one
+        quarantine record per corrupt step."""
+        from repro.ckpt import latest_step, restore_pytree_with_fallback
 
         if latest_step(sweep_dir) is None:
             return None
+
+        def on_corrupt(step, exc):
+            if events is not None:
+                events.append({
+                    "event": "quarantine", "path": sweep_dir,
+                    "step": int(step), "error": str(exc),
+                })
+
         try:
-            arrays, _step, extra = restore_pytree(
-                sweep_dir, {"part_coreness": np.zeros(0, np.int32)}
+            arrays, _step, extra = restore_pytree_with_fallback(
+                sweep_dir, {"part_coreness": np.zeros(0, np.int32)},
+                on_corrupt=on_corrupt,
             )
+        except FileNotFoundError:
+            return None  # every snapshot corrupt — part-boundary resume
         except Exception as exc:
             logging.getLogger(__name__).warning(
                 "sweep snapshot %s unreadable (%s: %s) — resuming from the "
@@ -656,6 +711,8 @@ class _PartPipeline:
         slice_decomposes: Optional[List[DecomposeFn]] = None,
         slice_specs: Optional[list] = None,
         fold_plan=None,
+        watchdog=None,
+        fault_plan=None,
     ):
         self.state = state
         self.remaining_graph = remaining_graph
@@ -692,6 +749,19 @@ class _PartPipeline:
         self.speculation_discards = 0
         self._wave_index = 0
 
+        # Fault tolerance: the wave watchdog config (None = fail-fast, the
+        # historical semantics), the chaos-injection plan consulted at the
+        # named sites, slices blacklisted so far (they stay dead for the
+        # rest of the run — wave width shrinks S -> S-1 -> ... -> 1), and
+        # the accumulated retry/blacklist/replan event accounting.
+        self.watchdog = watchdog
+        self.fault_plan = fault_plan
+        self.blacklisted: set = set()
+        self.retries = 0
+        self.replans = 0
+        self.degraded_waves = 0
+        self.fault_events: List[dict] = []
+
         self.parts: List[PartReport] = state.reports
         self.preprocess_time_s = 0.0
         self.prefetch_hits = 0
@@ -702,6 +772,16 @@ class _PartPipeline:
             self._executor = concurrent.futures.ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix=PREFETCH_THREAD_PREFIX
             )
+
+    def _visit_fault(self, site: str, **ctx) -> None:
+        """Chaos hook: consult the fault plan at a named site (no-op
+        without one). Faults at main-thread sites (``boundary_fold``,
+        ``checkpoint_save``, ``prefetch``) are fail-fast — they kill the
+        run like a real crash would, and recovery is the resume path;
+        only ``slice_conquer`` faults (visited inside the wave executor)
+        are retried/re-planned in-run."""
+        if self.fault_plan is not None:
+            self.fault_plan.visit(site, **ctx)
 
     # ---------------- divide stage ---------------- #
     def _fresh_stats(self) -> DivideStats:
@@ -799,6 +879,7 @@ class _PartPipeline:
         thread that owns ``stats`` — the byte counter is main-thread-only
         because the prefetch worker never runs with a fold plan (overlap
         and part_parallel are mutually exclusive)."""
+        self._visit_fault("boundary_fold", n_nodes=int(graph.n_nodes))
         if self.fold_plan is not None:
             from repro.core.distributed import device_external_info
 
@@ -835,6 +916,7 @@ class _PartPipeline:
 
     def _prefetch_task(self, graph: Graph, ext: np.ndarray,
                        cand_mask: np.ndarray, cursor: int) -> _Prefetch:
+        self._visit_fault("prefetch", cursor=cursor)
         pf = self._speculative_shrink(graph, ext, cand_mask, cursor)
         pf.plan = self._plan_on(
             pf.shrink_graph, pf.ext_next, cursor + 1, speculative=True
@@ -854,7 +936,7 @@ class _PartPipeline:
 
     # ---------------- conquer stage ---------------- #
     def _conquer(self, plan: PartPlan, fn: Optional[DecomposeFn] = None,
-                 lead: bool = True, account: bool = True):
+                 lead: bool = True, account: bool = True, heartbeat=None):
         """Conquer one part. ``fn`` overrides the engine (a wave slice's
         decompose); ``lead=False`` (a wave's non-first parts) skips the
         pending-snapshot consult and the sweep-snapshot hook — only the
@@ -863,7 +945,9 @@ class _PartPipeline:
         sequential run crashed in that part would. ``account=False``
         defers the preprocess-time accounting to the caller (the wave
         runner books it on the main thread — slice threads must not race
-        on the counter)."""
+        on the counter). ``heartbeat`` (watchdog mode) is a zero-arg
+        liveness callable composed into the engine's ``on_sweep`` hook —
+        progress = sweep count, exactly what the watchdog times out on."""
         state = self.state
         t0 = time.perf_counter()
         init = None
@@ -907,6 +991,14 @@ class _PartPipeline:
                 _last["c"] = c
                 if self.on_sweep_saved is not None:
                     self.on_sweep_saved(_cursor, _start + it, save_s)
+
+        if heartbeat is not None:
+            inner = hook
+
+            def hook(it, coreness, _inner=inner):
+                heartbeat()
+                if _inner is not None:
+                    _inner(it, coreness)
 
         if account:
             self.preprocess_time_s += (
@@ -1044,6 +1136,8 @@ class _PartPipeline:
         save (they are stale the moment the boundary exists; a crash
         between save and purge is caught by snapshot validation)."""
         if self.checkpoint_dir is not None:
+            self._visit_fault("checkpoint_save",
+                              parts_done=int(self.state.parts_done))
             on_done = None
             if report is not None:
                 def on_done(_step, secs, _r=report):
@@ -1059,18 +1153,25 @@ class _PartPipeline:
             self.on_part_done(len(self.parts) - 1, report)
 
     # ---------------- part-parallel waves ---------------- #
+    def _wave_width(self) -> int:
+        """Parts planned per wave: the configured slice count minus the
+        blacklisted slices (elastic degradation — a degraded run plans
+        narrower waves; at width 1 it IS the sequential loop)."""
+        return max(1, (self.part_parallel or 1) - len(self.blacklisted))
+
     def _plan_wave(self, first_plan: PartPlan):
-        """Plan up to ``part_parallel`` consecutive parts by chaining
-        speculative shrinks: part ``i+1`` is planned on the PREDICTED
-        shrink of part ``i`` (every candidate finalizes — the PR 5
-        speculation discipline at depth ``part_parallel`` instead of 1).
-        Returns ``(wave, shrinks)`` with ``shrinks[i]`` the speculative
-        shrink applying after ``wave[i]`` (``None`` for empty parts and
-        for the un-speculated last entry). Main-thread, pure host work."""
+        """Plan up to ``part_parallel`` consecutive parts (minus any
+        blacklisted slices) by chaining speculative shrinks: part ``i+1``
+        is planned on the PREDICTED shrink of part ``i`` (every candidate
+        finalizes — the PR 5 speculation discipline at depth
+        ``part_parallel`` instead of 1). Returns ``(wave, shrinks)`` with
+        ``shrinks[i]`` the speculative shrink applying after ``wave[i]``
+        (``None`` for empty parts and for the un-speculated last entry).
+        Main-thread, pure host work."""
         wave = [first_plan]
         shrinks: List[Optional[_Prefetch]] = [None]
         graph, ext = self.remaining_graph, self.state.ext_remaining
-        while len(wave) < self.part_parallel and not wave[-1].is_rest:
+        while len(wave) < self._wave_width() and not wave[-1].is_rest:
             cur = wave[-1]
             if not cur.is_empty:
                 pf = self._speculative_shrink(graph, ext, cur.cand_mask,
@@ -1099,15 +1200,30 @@ class _PartPipeline:
         predicted shrink is adopted (byte-identical to the sequential
         fold), on a miss the sync fold runs and every later speculative
         conquer of the wave is discarded, exactly as the sequential loop
-        would have recomputed them."""
-        from repro.core.partsched import assign_parts, conquer_wave, cost_for_plan
+        would have recomputed them.
+
+        With a watchdog configured the wave is fault-tolerant: failed
+        parts retry on their slice with backoff; a slice that exhausts
+        its retries or hangs past the timeout is blacklisted for the rest
+        of the run and the wave tail re-plans over the survivors (parts
+        are idempotent, so the result stays byte-identical). Telemetry
+        (retries/blacklists/replans) folds into the run report."""
+        from repro.core.partsched import (
+            WaveTelemetry,
+            assign_parts,
+            conquer_wave,
+            cost_for_plan,
+        )
 
         state = self.state
+        surviving = [
+            sp for sp in self.slice_specs if sp.index not in self.blacklisted
+        ]
         live = [p for p in wave if not p.is_empty]
         costs = [
-            cost_for_plan(p.bg, p.cursor, self.slice_specs[0]) for p in live
+            cost_for_plan(p.bg, p.cursor, surviving[0]) for p in live
         ]
-        schedule = assign_parts(costs, self.slice_specs)
+        schedule = assign_parts(costs, surviving)
         # Divide-side accounting for the whole wave, booked on the main
         # thread before the slice threads start (_conquer(account=False)).
         self.preprocess_time_s += sum(
@@ -1117,22 +1233,48 @@ class _PartPipeline:
         by_cursor = {p.cursor: p for p in live}
         assign_of = {a.cursor: a for a in schedule.assignments}
 
-        def run_part(cursor: int, s: int):
+        def _run_one(cursor: int, s: int, heartbeat=None):
             plan = by_cursor[cursor]
             fn = (
                 self.slice_decomposes[s]
                 if self.slice_decomposes is not None else None
             )
             out = self._conquer(
-                plan, fn=fn, lead=(cursor == lead_cursor), account=False
+                plan, fn=fn, lead=(cursor == lead_cursor), account=False,
+                heartbeat=heartbeat,
             )
             # Only slice ``s``'s worker writes index ``s`` — no lock needed.
             self.slice_busy_s[s] += out[0].wall_time_s
             return out
 
+        if self.watchdog is not None:
+            run_part = _run_one
+        else:
+            # Fail-fast path: keep the historical two-arg call shape (no
+            # heartbeat composed into on_sweep), so a custom decompose_fn
+            # that accepts no kwargs stays usable without a watchdog.
+            def run_part(cursor: int, s: int):
+                return _run_one(cursor, s)
+
+        tel = WaveTelemetry()
         t0 = time.perf_counter()
-        results = conquer_wave(schedule, run_part)
-        self.conquer_wall_s += time.perf_counter() - t0
+        try:
+            results = conquer_wave(
+                schedule, run_part, slices=surviving, watchdog=self.watchdog,
+                fault_plan=self.fault_plan, telemetry=tel,
+            )
+        finally:
+            self.conquer_wall_s += time.perf_counter() - t0
+            self.retries += tel.retries
+            self.replans += tel.replans
+            if tel.blacklisted:
+                self.degraded_waves += 1
+                self.blacklisted.update(tel.blacklisted)
+            self.fault_events.extend(tel.events)
+        retries_of: Dict[int, int] = {}
+        for e in tel.events:
+            if e.get("event") == "retry":
+                retries_of[e["cursor"]] = retries_of.get(e["cursor"], 0) + 1
 
         for i, plan in enumerate(wave):
             if plan.is_empty:
@@ -1143,9 +1285,12 @@ class _PartPipeline:
             a = assign_of[plan.cursor]
 
             def stamp(r, _a=a):
+                # slice_index is the PLANNED placement; a re-planned part's
+                # actual executor is in the replan event log.
                 r.slice_index = _a.slice_index
                 r.wave = self._wave_index
                 r.modeled_cost_bytes = _a.cost.total
+                r.retries = retries_of.get(_a.cursor, 0)
 
             if plan.is_rest:
                 self._merge_rest(plan, res, density, start_sweep,
@@ -1268,6 +1413,11 @@ def dc_kcore(
     part_parallel: Optional[int] = None,
     part_parallel_plan=None,
     slice_capacity_bytes: Optional[int] = None,
+    slice_timeout_s: Optional[float] = None,
+    max_retries: Optional[int] = None,
+    retry_backoff_s: float = 0.05,
+    fault_plan=None,
+    ckpt_retain: int = 2,
 ) -> tuple[np.ndarray, DCKCoreReport]:
     """Run DC-kCore. ``thresholds=()`` degenerates to the monolithic baseline
     (= the PSGraph competitor in the paper's tables).
@@ -1359,6 +1509,29 @@ def dc_kcore(
     falls back to the part boundary. ``on_sweep_saved``
     (``hook(part_cursor, sweep, save_seconds)``) fires after each snapshot
     save — the mid-sweep fault-injection tests crash from it.
+
+    ``slice_timeout_s`` / ``max_retries`` (require ``part_parallel``) turn
+    the wave executor fault-TOLERANT instead of fail-fast: a failed part
+    retries on its slice with exponential backoff (``retry_backoff_s``
+    base) up to ``max_retries`` times; a slice whose sweep heartbeat
+    stalls past ``slice_timeout_s`` — or that exhausts its retries — is
+    blacklisted for the rest of the run and its unfinished parts re-plan
+    over the surviving slices (S -> S-1 -> ... -> 1, width 1 ≡ the
+    sequential loop). Parts are idempotent over immutable inputs, so a
+    degraded run's coreness stays **byte-identical** to the fault-free
+    sequential run; retries/blacklists/degraded waves land in the report.
+    Without either knob the historical fail-fast semantics are unchanged
+    (the first slice failure re-raises after the wave drains).
+
+    ``fault_plan`` (a :class:`repro.runtime.FaultPlan`) injects chaos —
+    crashes, hangs, slowdowns — into the named pipeline sites
+    (``slice_conquer``, ``boundary_fold``, ``checkpoint_save``,
+    ``prefetch``); the chaos tests, the CLI ``--fault`` flag and the
+    bench harness share this one mechanism. ``ckpt_retain`` sizes both
+    checkpoint managers' retention (default 2: the newest boundary plus
+    one predecessor, so a corrupted latest step — detected by per-array
+    CRC32, quarantined to ``step_*.corrupt`` — resumes from the previous
+    retained step instead of restarting the part from scratch).
     """
     slice_decomposes = slice_specs = fold_plan = None
     if part_parallel is not None:
@@ -1395,6 +1568,21 @@ def dc_kcore(
             ]
     elif part_parallel_plan is not None:
         raise ValueError("part_parallel_plan requires part_parallel")
+    watchdog = None
+    if slice_timeout_s is not None or max_retries is not None:
+        if part_parallel is None:
+            raise ValueError("slice_timeout_s/max_retries configure the "
+                             "part-parallel wave watchdog — they require "
+                             "part_parallel")
+        from repro.core.partsched import WatchdogConfig
+
+        watchdog = WatchdogConfig(
+            slice_timeout_s=slice_timeout_s,
+            max_retries=2 if max_retries is None else int(max_retries),
+            backoff_s=float(retry_backoff_s),
+        )
+    if ckpt_retain < 1:
+        raise ValueError(f"ckpt_retain must be >= 1, got {ckpt_retain}")
     if decompose_fn is None:
         decompose_fn = (  # noqa: E731
             lambda bg, **kw: decompose(bg, op=engine, int16=int16, **kw)
@@ -1415,14 +1603,17 @@ def dc_kcore(
     resumed_parts = 0
     sweep_dir = _sweep_dir(checkpoint_dir) if checkpoint_dir is not None else None
     pending_snap: Optional[SweepSnapshot] = None
+    # Quarantine records from corrupt-checkpoint fallbacks during restore —
+    # folded into the report's fault accounting.
+    restore_events: List[dict] = []
     if resume:
-        state = PipelineState.restore(checkpoint_dir, n)
+        state = PipelineState.restore(checkpoint_dir, n, events=restore_events)
         if sweep_checkpoint_every is not None:
             # Mid-part resume point — consulted even when no part boundary
             # exists yet (a run killed during part 0 leaves only sweep
             # snapshots), and validated against the part it claims to
             # belong to at the moment that part runs.
-            pending_snap = SweepSnapshot.restore(sweep_dir)
+            pending_snap = SweepSnapshot.restore(sweep_dir, events=restore_events)
     if state is None:
         if checkpoint_dir is not None and not resume:
             # Fresh run: purge stale steps (and sweep snapshots) from any
@@ -1453,6 +1644,8 @@ def dc_kcore(
                 resumed_parts=resumed_parts,
                 overlap=overlap,
                 part_parallel=part_parallel or 0,
+                quarantined_steps=len(restore_events),
+                fault_events=list(restore_events),
             )
             return state.coreness.copy(), report
         # Rebuild the remaining graph from the original + finalized mask.
@@ -1469,8 +1662,8 @@ def dc_kcore(
     if checkpoint_dir is not None:
         from repro.ckpt import CheckpointManager
 
-        state_mgr = CheckpointManager(checkpoint_dir, keep=1)
-        sweeps_mgr = CheckpointManager(sweep_dir, keep=1)
+        state_mgr = CheckpointManager(checkpoint_dir, retain=ckpt_retain)
+        sweeps_mgr = CheckpointManager(sweep_dir, retain=ckpt_retain)
 
     pipeline = _PartPipeline(
         state=state,
@@ -1496,6 +1689,8 @@ def dc_kcore(
         slice_decomposes=slice_decomposes,
         slice_specs=slice_specs,
         fold_plan=fold_plan,
+        watchdog=watchdog,
+        fault_plan=fault_plan,
     )
     try:
         pipeline.run()
@@ -1503,8 +1698,14 @@ def dc_kcore(
         # Crash-by-exception (incl. the fault-injection hooks): drain the
         # worker and pending saves FIRST, so the disk state the "crashed"
         # run leaves behind is deterministic, then let the crash propagate.
+        # Injected hangs are released first — a parked worker must wake
+        # (and raise) for the drain to terminate promptly.
+        if fault_plan is not None:
+            fault_plan.release()
         pipeline.close(suppress_errors=True)
         raise
+    if fault_plan is not None:
+        fault_plan.release()
     pipeline.close()
 
     report = DCKCoreReport(
@@ -1520,6 +1721,11 @@ def dc_kcore(
         slice_busy_s=list(pipeline.slice_busy_s),
         speculation_discards=pipeline.speculation_discards,
         boundary_exchange_bytes=pipeline.boundary_exchange_bytes,
+        retries=pipeline.retries,
+        blacklisted_slices=sorted(pipeline.blacklisted),
+        degraded_waves=pipeline.degraded_waves,
+        quarantined_steps=len(restore_events),
+        fault_events=list(restore_events) + list(pipeline.fault_events),
     )
     if not bool((state.coreness >= 0).all()):
         raise MergeIncompleteError(

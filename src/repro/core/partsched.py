@@ -35,11 +35,18 @@ property-tested without a single device:
 * **Wave executor** — :func:`conquer_wave` runs one planned wave: one
   worker thread per slice (named ``dckcore-conquer-*`` for the test
   suite's leak gate), each conquering its assigned parts in plan-cursor
-  order. Slices share no mutable state; a slice failure is re-raised in
-  the caller after every slice has drained (the earliest-cursor failure
-  wins, deterministically). Within a single process the "slices" are
-  disjoint device subsets of one mesh; across processes each host runs
-  the same schedule restricted to its own slice (see
+  order. Slices share no mutable state; by default a slice failure is
+  re-raised in the caller after every slice has drained (the
+  earliest-cursor failure wins, deterministically). Passing a
+  :class:`WatchdogConfig` arms the fault-tolerance layer instead: failed
+  parts retry on their slice with exponential backoff, per-slice
+  heartbeats detect hangs, and a slice that exhausts its retries or
+  hangs is blacklisted with its unfinished parts re-planned over the
+  survivors through the same :func:`assign_parts` pass — parts are
+  idempotent over immutable inputs, so the degraded wave stays
+  byte-identical. Within a single process the "slices" are disjoint
+  device subsets of one mesh; across processes each host runs the same
+  schedule restricted to its own slice (see
   ``launch.mesh.init_multiprocess``).
 
 How concurrency stays byte-identical to the sequential path: the wave
@@ -55,9 +62,11 @@ run — see ``dckcore`` for the merge/checkpoint ordering contract.
 """
 from __future__ import annotations
 
-import concurrent.futures
 import dataclasses
+import inspect
 import math
+import threading
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -344,42 +353,296 @@ def make_slice_decomposes(plan: MeshPlan, n_slices: int, **kw):
 # --------------------------------------------------------------------- #
 # Wave executor.
 # --------------------------------------------------------------------- #
+class SliceHangError(RuntimeError):
+    """The watchdog declared a slice hung: no heartbeat (sweep progress)
+    within ``slice_timeout_s`` while a part was in flight."""
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    """Fault-tolerance knobs for :func:`conquer_wave`.
+
+    ``slice_timeout_s``: declare a slice dead after this long without a
+    heartbeat while a part is in flight (``None`` = never — crashes are
+    still retried). ``max_retries``: failed attempts per part on the same
+    slice before the slice is blacklisted. ``backoff_s``: base of the
+    exponential retry backoff. ``poll_s``: watchdog poll period.
+    ``drain_timeout_s``: how long the caller waits for abandoned worker
+    threads to terminate after the wave settles (injected hangs are
+    released and always terminate; a truly wedged thread past this is
+    reported in telemetry — nothing in-process can kill it).
+    """
+
+    slice_timeout_s: Optional[float] = None
+    max_retries: int = 2
+    backoff_s: float = 0.05
+    poll_s: float = 0.02
+    drain_timeout_s: float = 10.0
+
+
+@dataclasses.dataclass
+class WaveTelemetry:
+    """What the fault-tolerance layer did during one wave."""
+
+    retries: int = 0
+    blacklisted: List[int] = dataclasses.field(default_factory=list)
+    replans: int = 0
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def record(self, event: str, **ctx):
+        self.events.append({"event": event, **ctx})
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.blacklisted)
+
+
+def _accepts_heartbeat(fn) -> bool:
+    try:
+        return "heartbeat" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+class _WaveRunner:
+    """One wave's execution state: per-slice work queues, heartbeats,
+    retry/blacklist bookkeeping. All mutable state is guarded by one
+    condition variable; ``run_part`` itself runs outside the lock."""
+
+    def __init__(self, schedule, run_part, slices, watchdog, fault_plan, tel):
+        self.schedule = schedule
+        self.run_part = run_part
+        self.wd = watchdog
+        self.fault_plan = fault_plan
+        self.tel = tel
+        self.fail_fast = watchdog is None
+        self.hb_aware = _accepts_heartbeat(run_part)
+        if slices is None:
+            slices = [SliceSpec(index=s, n_node_shards=1, n_slot_shards=1)
+                      for s in range(schedule.n_slices)]
+        self.slices = list(slices)
+        self.cond = threading.Condition()
+        self.queues: Dict[int, List[int]] = {
+            sp.index: schedule.parts_for(sp.index) for sp in self.slices
+        }
+        self.costs: Dict[int, PartCost] = {
+            a.cursor: a.cost for a in schedule.assignments
+        }
+        self.n_parts = len(schedule.assignments)
+        self.results: Dict[int, object] = {}
+        self.done: set = set()
+        self.inflight: Dict[int, int] = {}     # slice index -> cursor
+        self.beat: Dict[int, float] = {}       # slice index -> monotonic
+        self.dead: Dict[int, BaseException] = {}
+        self.failures: List[tuple] = []        # fail-fast: (cursor, exc)
+        self.fatal: Optional[tuple] = None     # (cursor, exc) — FT exhausted
+        self.stop = False
+
+    # -- lifecycle ----------------------------------------------------- #
+    def run(self) -> Dict[int, object]:
+        threads = [
+            threading.Thread(
+                target=self._worker, args=(sp.index,), daemon=True,
+                name=f"{CONQUER_THREAD_PREFIX}-{sp.index}",
+            )
+            for sp in self.slices
+        ]
+        for t in threads:
+            t.start()
+        try:
+            if not self.fail_fast:
+                self._monitor()
+        finally:
+            # Fail-fast workers drain their static queues and exit on their
+            # own — raising ``stop`` early would race them into dropping
+            # work (or a failure record). Only FT workers park for re-plans
+            # and need the explicit wake-up once the monitor settles.
+            if not self.fail_fast:
+                with self.cond:
+                    self.stop = True
+                    self.cond.notify_all()
+                if self.fault_plan is not None:
+                    # The monitor only exits once the wave settled (all
+                    # parts done or fatal), so any worker still parked in
+                    # an injected hang is abandoned — wake it now so the
+                    # drain join doesn't wait out the hang's delay.
+                    self.fault_plan.release()
+            deadline = self.wd.drain_timeout_s if self.wd else None
+            for t in threads:
+                t.join(timeout=deadline)
+            if any(t.is_alive() for t in threads) and self.fault_plan is not None:
+                self.fault_plan.release()
+                for t in threads:
+                    t.join(timeout=deadline)
+            for t in threads:
+                if t.is_alive():
+                    self.tel.record("thread_leak", thread=t.name)
+        if self.fail_fast and self.failures:
+            self.failures.sort(key=lambda f: f[0])
+            raise self.failures[0][1]
+        if self.fatal is not None:
+            raise self.fatal[1]
+        return self.results
+
+    def _monitor(self):
+        with self.cond:
+            while len(self.done) < self.n_parts and self.fatal is None:
+                if self.wd.slice_timeout_s is not None:
+                    now = time.monotonic()
+                    for idx, cur in list(self.inflight.items()):
+                        if idx in self.dead:
+                            continue
+                        if now - self.beat.get(idx, now) > self.wd.slice_timeout_s:
+                            self._declare_dead(
+                                idx, cur,
+                                SliceHangError(
+                                    f"slice {idx} hung on part cursor={cur}: no "
+                                    f"heartbeat for {self.wd.slice_timeout_s}s"
+                                ),
+                                reason="hang",
+                            )
+                self.cond.wait(timeout=self.wd.poll_s)
+
+    # -- blacklist + re-plan (cond held) ------------------------------- #
+    def _declare_dead(self, idx: int, cur: Optional[int],
+                      exc: BaseException, reason: str):
+        if idx in self.dead:
+            return
+        self.dead[idx] = exc
+        self.inflight.pop(idx, None)
+        self.tel.blacklisted.append(idx)
+        self.tel.record("blacklist", slice=idx, cursor=cur, reason=reason,
+                        error=repr(exc))
+        unfinished = [c for c in ([cur] if cur is not None else [])
+                      if c not in self.done]
+        unfinished += self.queues[idx]
+        self.queues[idx] = []
+        survivors = [sp for sp in self.slices if sp.index not in self.dead]
+        if not survivors:
+            self.fatal = (cur if cur is not None else -1, exc)
+        elif unfinished:
+            try:
+                sub = assign_parts([self.costs[c] for c in unfinished], survivors)
+            except SliceCapacityError as ce:
+                self.fatal = (unfinished[0], ce)
+            else:
+                self.tel.replans += 1
+                self.tel.record(
+                    "replan", cursors=sorted(unfinished),
+                    survivors=[sp.index for sp in survivors],
+                )
+                for a in sub.assignments:
+                    self.queues[a.slice_index].append(a.cursor)
+                for q in self.queues.values():
+                    q.sort()
+        self.cond.notify_all()
+
+    # -- per-slice worker ---------------------------------------------- #
+    def _worker(self, idx: int):
+        def heartbeat(*_a, **_k):
+            with self.cond:
+                self.beat[idx] = time.monotonic()
+
+        while True:
+            with self.cond:
+                cur = None
+                while cur is None:
+                    if self.stop or idx in self.dead or self.fatal is not None:
+                        return
+                    if self.queues[idx]:
+                        cur = self.queues[idx].pop(0)
+                        self.inflight[idx] = cur
+                        self.beat[idx] = time.monotonic()
+                        break
+                    if self.fail_fast or len(self.done) >= self.n_parts:
+                        # Fail-fast queues are static — an empty queue means
+                        # this slice is drained; FT workers park for re-plans
+                        # until the whole wave settles.
+                        return
+                    self.cond.wait(timeout=0.05)
+            attempt = 0
+            while True:
+                try:
+                    if self.fault_plan is not None:
+                        self.fault_plan.visit(
+                            "slice_conquer", cursor=cur, slice=idx,
+                            attempt=attempt,
+                        )
+                    if self.hb_aware:
+                        out = self.run_part(cur, idx, heartbeat=heartbeat)
+                    else:
+                        out = self.run_part(cur, idx)
+                except BaseException as e:  # noqa: BLE001 — retried/re-raised
+                    with self.cond:
+                        if idx in self.dead or self.stop:
+                            return  # abandoned mid-attempt; result not wanted
+                        if self.fail_fast:
+                            self.failures.append((cur, e))
+                            self.inflight.pop(idx, None)
+                            self.cond.notify_all()
+                            return
+                        attempt += 1
+                        if attempt > self.wd.max_retries:
+                            self._declare_dead(idx, cur, e, reason="crash")
+                            return
+                        self.tel.retries += 1
+                        self.tel.record("retry", slice=idx, cursor=cur,
+                                        attempt=attempt, error=repr(e))
+                        self.beat[idx] = time.monotonic()
+                    time.sleep(self.wd.backoff_s * (2 ** (attempt - 1)))
+                    continue
+                with self.cond:
+                    if idx in self.dead:
+                        # Declared hung while (slowly) finishing: the part
+                        # was re-planned; parts are idempotent over
+                        # immutable inputs, so the survivor's byte-identical
+                        # result is the one committed.
+                        self.tel.record("discarded_result", slice=idx, cursor=cur)
+                        return
+                    self.results[cur] = out
+                    self.done.add(cur)
+                    self.inflight.pop(idx, None)
+                    self.cond.notify_all()
+                break
+
+
 def conquer_wave(
     schedule: WaveSchedule,
     run_part: Callable[[int, int], object],
+    *,
+    slices: Optional[Sequence[SliceSpec]] = None,
+    watchdog: Optional[WatchdogConfig] = None,
+    fault_plan=None,
+    telemetry: Optional[WaveTelemetry] = None,
 ) -> Dict[int, object]:
     """Run one wave: each slice conquers its assigned parts concurrently.
 
     ``run_part(cursor, slice_index)`` conquers one part and returns its
     result; each slice's parts run in ascending cursor order on that
-    slice's worker thread. Every slice drains before this returns — on
-    failure the earliest-cursor slice's exception is re-raised (the others
-    are suppressed deterministically), and no worker thread outlives the
-    call either way.
+    slice's worker thread. If ``run_part`` accepts a ``heartbeat`` keyword
+    it receives a zero-arg callable to signal liveness (the pipeline wires
+    it to the engine's per-sweep ``on_sweep`` hook).
+
+    Default (``watchdog=None``) is fail-fast: every slice drains before
+    this returns — on failure the earliest-cursor slice's exception is
+    re-raised (the others are suppressed deterministically), and no worker
+    thread outlives the call either way.
+
+    With a :class:`WatchdogConfig` the wave becomes fault-tolerant: a
+    failed part is retried on its slice with exponential backoff up to
+    ``max_retries``; a slice whose heartbeat stalls past
+    ``slice_timeout_s`` (or that exhausts its retries) is blacklisted and
+    its unfinished parts are re-planned over the surviving slices via
+    :func:`assign_parts` (S -> S-1 -> ... -> 1 ≡ sequential). Parts are
+    idempotent over immutable inputs, so a retried or re-planned part
+    produces byte-identical coreness. Only when *no* slice survives (or a
+    re-plan hits :class:`SliceCapacityError`) does the wave raise.
+    ``telemetry`` (a :class:`WaveTelemetry`) collects retry/blacklist/
+    re-plan events; ``fault_plan`` (:class:`repro.runtime.FaultPlan`) is
+    consulted at the ``slice_conquer`` site before each attempt.
+    ``slices`` carries the actual :class:`SliceSpec`\\ s (required for
+    re-planning; defaults to unit specs indexed ``0..n_slices-1``).
     """
-    results: Dict[int, object] = {}
-    failures: List[tuple] = []  # (first cursor of the slice, exception)
-
-    def run_slice(s: int) -> None:
-        cursors = schedule.parts_for(s)
-        for cur in cursors:
-            try:
-                results[cur] = run_part(cur, s)
-            except BaseException as e:  # noqa: BLE001 — re-raised below
-                failures.append((cur, e))
-                return
-
-    pool = concurrent.futures.ThreadPoolExecutor(
-        max_workers=max(1, schedule.n_slices),
-        thread_name_prefix=CONQUER_THREAD_PREFIX,
-    )
-    try:
-        futs = [pool.submit(run_slice, s) for s in range(schedule.n_slices)]
-        for f in futs:
-            f.result()
-    finally:
-        pool.shutdown(wait=True)
-    if failures:
-        failures.sort(key=lambda f: f[0])
-        raise failures[0][1]
-    return results
+    tel = telemetry if telemetry is not None else WaveTelemetry()
+    runner = _WaveRunner(schedule, run_part, slices, watchdog, fault_plan, tel)
+    return runner.run()

@@ -41,11 +41,22 @@ slices are priced against the real memory budget: slice capacity defaults
 to the ``--budget-gb`` value (override with ``--slice-capacity-gb``), and a
 part whose modeled resident bytes no slice admits triggers a re-divide
 with smaller parts (``plan_thresholds`` at a halved budget) instead of
-aborting the pipeline.
+aborting the pipeline. ``--slice-timeout`` / ``--max-retries`` arm the
+part-parallel fault-tolerance layer: a crashed part retries on its slice
+with backoff, and a slice that hangs past the timeout (or exhausts its
+retries) is blacklisted with its unfinished parts re-planned over the
+survivors — the run completes degraded, byte-identical to sequential.
+``--ckpt-retain`` keeps the N newest boundary/sweep checkpoints (default
+2, so a corrupted latest step can fall back to its predecessor).
+``--fault site:kind[:at[:count[:delay]]]`` injects failures for chaos
+testing (sites: slice_conquer, boundary_fold, checkpoint_save, prefetch,
+serve_update; kinds: crash, hang, slow); ``--fault-log FILE`` writes the
+run's fault/recovery event trail as JSON.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from repro.core.dckcore import dc_kcore
@@ -216,6 +227,24 @@ def main():
                          "bytes (default: the --budget-gb value, so slices "
                          "are priced against the same budget the divide "
                          "planned for; requires --part-parallel)")
+    ap.add_argument("--slice-timeout", type=float, default=None, metavar="S",
+                    help="declare a part-parallel slice dead when its "
+                         "sweep heartbeat stalls this many seconds "
+                         "(blacklist + re-plan over the survivors; "
+                         "requires --part-parallel)")
+    ap.add_argument("--max-retries", type=int, default=None, metavar="N",
+                    help="retry a crashed part on its slice up to N times "
+                         "with exponential backoff before blacklisting "
+                         "the slice (requires --part-parallel)")
+    ap.add_argument("--ckpt-retain", type=int, default=2, metavar="N",
+                    help="keep the N newest boundary/sweep checkpoint "
+                         "steps (default 2: a corrupted latest step falls "
+                         "back to its predecessor on --resume)")
+    ap.add_argument("--fault", action="append", default=[], metavar="SPEC",
+                    help="inject a failure: site:kind[:at[:count[:delay]]] "
+                         "(repeatable; chaos testing)")
+    ap.add_argument("--fault-log", default=None, metavar="FILE",
+                    help="write the fault/recovery event trail as JSON")
     ap.add_argument("--devices", type=int, default=None, metavar="N",
                     help="force N virtual host devices and run the "
                          "shard_map engine over a data x model mesh split "
@@ -240,6 +269,21 @@ def main():
         ap.error("--devices selects the shard_map engine; drop --engine")
     if args.slice_capacity_gb is not None and args.part_parallel is None:
         ap.error("--slice-capacity-gb requires --part-parallel")
+    if (args.slice_timeout is not None or args.max_retries is not None) \
+            and args.part_parallel is None:
+        ap.error("--slice-timeout/--max-retries configure the part-parallel "
+                 "watchdog; they require --part-parallel")
+    if args.ckpt_retain < 1:
+        ap.error("--ckpt-retain must be >= 1")
+
+    fault_plan = None
+    if args.fault:
+        from repro.runtime import FaultPlan
+
+        try:
+            fault_plan = FaultPlan.parse(args.fault)
+        except ValueError as e:
+            ap.error(str(e))
 
     part_parallel_plan = None
     if args.devices is not None:
@@ -304,7 +348,11 @@ def main():
         engine=args.engine, int16=args.int16,
         part_parallel=args.part_parallel,
         part_parallel_plan=part_parallel_plan,
-        slice_capacity_bytes=slice_capacity_bytes)
+        slice_capacity_bytes=slice_capacity_bytes,
+        slice_timeout_s=args.slice_timeout,
+        max_retries=args.max_retries,
+        fault_plan=fault_plan,
+        ckpt_retain=args.ckpt_retain)
     if n_replans:
         print(f"capacity re-divides: {n_replans} (final thresholds "
               f"{thresholds})")
@@ -326,6 +374,21 @@ def main():
               f"{report.prefetch_misses} miss(es), "
               f"{report.speculation_discards} conquer(s) discarded, "
               f"boundary-exchange bytes = {report.boundary_exchange_bytes:,}")
+    if (report.retries or report.blacklisted_slices or report.degraded_waves
+            or report.quarantined_steps):
+        bl = ",".join(str(s) for s in report.blacklisted_slices) or "-"
+        print(f"fault tolerance: {report.retries} part retr"
+              f"{'y' if report.retries == 1 else 'ies'}, "
+              f"blacklisted slices [{bl}], "
+              f"{report.degraded_waves} degraded wave(s), "
+              f"{report.quarantined_steps} quarantined checkpoint step(s)")
+    if args.fault_log:
+        events = list(report.fault_events)
+        if fault_plan is not None:
+            events += [e for e in fault_plan.events if e not in events]
+        with open(args.fault_log, "w") as f:
+            json.dump({"events": events}, f, indent=2, default=str)
+        print(f"fault-event log: {len(events)} event(s) -> {args.fault_log}")
     if report.resumed_parts:
         print(f"resumed: {report.resumed_parts} part(s) restored from "
               f"{args.checkpoint_dir}, not re-run")

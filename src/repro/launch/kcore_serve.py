@@ -15,7 +15,15 @@ top-core) against whatever snapshot is currently published. The run drains
 every sealed batch (stopping after ``--max-batches`` if set, or once the
 log has been idle for ``--idle-timeout-s``) and prints the publisher's
 metrics: updates/sec, publishes/sec, query p50/p99 latency, and staleness
-(edits pending at query time).
+(edits pending at query time, plus the maximum snapshot age observed by a
+query). A transient ``apply_updates``/publish failure is retried in place
+with exponential backoff (``--update-retries`` / ``--update-backoff-s``)
+before it takes the worker down — the batch is already drained from the
+log and ``apply_updates`` is pure over its inputs, so a retry is
+idempotent. ``--stale-warn-s`` prints a warning the first time a query
+sees a snapshot older than that; ``--fault serve_update:crash...``
+injects failures into the update path for chaos testing (see
+``repro.runtime.FaultPlan``).
 """
 from __future__ import annotations
 
@@ -47,7 +55,26 @@ def _update_loop(
     idle_timeout_s: float,
     poll_interval_s: float,
     stop: threading.Event,
+    retries: int = 3,
+    backoff_s: float = 0.05,
+    fault_plan=None,
 ) -> None:
+    def fold_and_publish(edits):
+        # One retry unit: the edits are already drained from the log and
+        # apply_updates is pure over (graph, coreness, edits), so rerunning
+        # after a transient failure is idempotent. State is only committed
+        # after publish succeeds.
+        if fault_plan is not None:
+            fault_plan.visit("serve_update", batch=state["n_batches"])
+        res = apply_updates(
+            state["graph"], state["coreness"], edits,
+            op=op, dirty_budget_frac=dirty_budget_frac,
+        )
+        pub.publish(res.graph, res.coreness, n_edits=edits.n_raw)
+        state["graph"], state["coreness"] = res.graph, res.coreness
+        state["modes"][res.mode] = state["modes"].get(res.mode, 0) + 1
+        state["n_batches"] += 1
+
     idle_since = time.perf_counter()
     try:
         while not stop.is_set():
@@ -59,14 +86,19 @@ def _update_loop(
             edits = reader.read_batch()
             idle_since = time.perf_counter()
             pub.note_pending(edits.n_raw)
-            res = apply_updates(
-                state["graph"], state["coreness"], edits,
-                op=op, dirty_budget_frac=dirty_budget_frac,
-            )
-            state["graph"], state["coreness"] = res.graph, res.coreness
-            state["modes"][res.mode] = state["modes"].get(res.mode, 0) + 1
-            state["n_batches"] += 1
-            pub.publish(res.graph, res.coreness, n_edits=edits.n_raw)
+            attempt = 0
+            while True:
+                try:
+                    fold_and_publish(edits)
+                    break
+                except Exception as exc:
+                    attempt += 1
+                    if attempt > retries or stop.is_set():
+                        raise
+                    state["update_retries"] += 1
+                    print(f"update batch failed ({exc!r}); "
+                          f"retry {attempt}/{retries}")
+                    time.sleep(backoff_s * (2 ** (attempt - 1)))
             if max_batches is not None and state["n_batches"] >= max_batches:
                 return
     except Exception as exc:  # surfaced as the CLI's exit error
@@ -90,6 +122,19 @@ def main(argv=None):
     ap.add_argument("--idle-timeout-s", type=float, default=1.0,
                     help="exit once the log has been idle this long")
     ap.add_argument("--poll-interval-s", type=float, default=0.01)
+    ap.add_argument("--update-retries", type=int, default=3,
+                    help="retry a failed update batch this many times with "
+                         "exponential backoff before exiting")
+    ap.add_argument("--update-backoff-s", type=float, default=0.05,
+                    help="base backoff between update retries (doubles "
+                         "per attempt)")
+    ap.add_argument("--stale-warn-s", type=float, default=None,
+                    help="warn when a query observes a snapshot older "
+                         "than this many seconds")
+    ap.add_argument("--fault", action="append", default=[], metavar="SPEC",
+                    help="inject a failure: site:kind[:at[:count[:delay]]] "
+                         "(chaos testing; the update worker visits the "
+                         "serve_update site per batch)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="emit the final metrics as one JSON line")
@@ -104,8 +149,14 @@ def main(argv=None):
           f"k_max={int(boot.coreness.max(initial=0))} "
           f"decompose {time.perf_counter() - t0:.2f}s; serving")
 
+    fault_plan = None
+    if args.fault:
+        from repro.runtime import FaultPlan
+
+        fault_plan = FaultPlan.parse(args.fault)
+
     state = {"graph": g, "coreness": boot.coreness, "modes": {},
-             "n_batches": 0, "error": None}
+             "n_batches": 0, "error": None, "update_retries": 0}
     stop = threading.Event()
     worker = threading.Thread(
         target=_update_loop,
@@ -115,15 +166,27 @@ def main(argv=None):
                     max_batches=args.max_batches,
                     idle_timeout_s=args.idle_timeout_s,
                     poll_interval_s=args.poll_interval_s,
-                    stop=stop),
+                    stop=stop,
+                    retries=args.update_retries,
+                    backoff_s=args.update_backoff_s,
+                    fault_plan=fault_plan),
         name=UPDATE_THREAD_NAME, daemon=True,
     )
     worker.start()
 
     rng = np.random.default_rng(args.seed)
+    max_age_s = 0.0
+    stale_warned = False
     try:
         while worker.is_alive():
             snap = pub.snapshot
+            age_s = time.perf_counter() - snap.published_at
+            max_age_s = max(max_age_s, age_s)
+            if (args.stale_warn_s is not None and not stale_warned
+                    and age_s > args.stale_warn_s):
+                stale_warned = True
+                print(f"WARNING: serving a snapshot {age_s:.2f}s old "
+                      f"(v{snap.version}; threshold {args.stale_warn_s}s)")
             ids = rng.integers(0, max(1, snap.n_nodes), args.query_batch)
             pub.query_coreness(ids)
             pub.query_in_kcore(ids[: max(1, args.query_batch // 4)],
@@ -134,6 +197,8 @@ def main(argv=None):
             worker.join(timeout=0.002)
     finally:
         stop.set()
+        if fault_plan is not None:
+            fault_plan.release()  # wake any injected hang so join returns
         worker.join()
     if state["error"] is not None:
         raise state["error"]
@@ -141,6 +206,8 @@ def main(argv=None):
     m = pub.metrics()
     m["batches_drained"] = state["n_batches"]
     m["update_modes"] = state["modes"]
+    m["update_retries"] = state["update_retries"]
+    m["staleness_max_age_s"] = max_age_s
     m["final_n_nodes"] = int(state["graph"].n_nodes)
     m["final_k_max"] = int(state["coreness"].max(initial=0))
     if args.json:
@@ -154,7 +221,11 @@ def main(argv=None):
               f"p99 = {m['query_p99_ms']:.3f} ms")
         print(f"staleness: mean {m['staleness_mean_edits']:.1f} / "
               f"max {m['staleness_max_edits']:.0f} pending edits at query "
-              f"time; {m['pending_edits']} still pending at exit")
+              f"time; {m['pending_edits']} still pending at exit; "
+              f"max snapshot age {m['staleness_max_age_s']:.2f}s")
+        if m["update_retries"]:
+            print(f"update worker: {m['update_retries']} transient "
+                  f"failure(s) retried")
     return m
 
 

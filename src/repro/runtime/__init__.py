@@ -1,11 +1,22 @@
 from repro.runtime.train_loop import TrainLoop, make_train_step
-from repro.runtime.fault import FailureInjector, run_with_retries
+from repro.runtime.fault import (
+    FAULT_SITES,
+    FailureInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedFailure,
+    run_with_retries,
+)
 from repro.runtime.serve_loop import greedy_generate
 
 __all__ = [
     "TrainLoop",
     "make_train_step",
     "FailureInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "FAULT_SITES",
+    "InjectedFailure",
     "run_with_retries",
     "greedy_generate",
 ]

@@ -122,9 +122,11 @@ def test_resume_skips_finished_parts_and_ignores_tmp(rmat14_runs):
     assert [p.name for p in r["res_rep"].parts] == [p.name for p in r["base_rep"].parts]
     assert latest_step(r["ck"]) == len(r["thresholds"]) + 1
     assert not os.path.exists(os.path.join(r["ck"], "step_00000002.tmp"))
-    # Retention: only the latest boundary is kept on disk (state is O(n)).
+    # Retention: the newest boundaries (retain=2) are kept on disk — the
+    # latest plus one predecessor a corrupt latest can fall back to.
     steps = sorted(d for d in os.listdir(r["ck"]) if d.startswith("step_"))
-    assert steps == [f"step_{len(r['thresholds']) + 1:08d}"]
+    last = len(r["thresholds"]) + 1
+    assert steps == [f"step_{last - 1:08d}", f"step_{last:08d}"]
 
 
 def test_resume_of_complete_run_returns_stored_result(rmat14_runs):
@@ -281,11 +283,12 @@ def test_sweep_storm_covered_every_boundary(rmat14_runs, rmat14_sweep_storm):
 
 
 def test_sweep_storm_disk_stays_bounded(rmat14_sweep_storm):
-    """After completion: one pipeline step on disk, no sweep snapshots (all
-    purged at their part boundary), junk .tmp never restored from."""
+    """After completion: at most retain=2 pipeline steps on disk, no sweep
+    snapshots (all purged at their part boundary), junk .tmp never restored
+    from."""
     ck = rmat14_sweep_storm["ck"]
     steps = sorted(d for d in os.listdir(ck) if d.startswith("step_") and not d.endswith(".tmp"))
-    assert len(steps) == 1
+    assert 1 <= len(steps) <= 2
     sweeps = [d for d in os.listdir(_sweep_dir(ck)) if d.startswith("step_") and not d.endswith(".tmp")]
     assert sweeps == []
 
@@ -533,15 +536,15 @@ def test_overlap_storm_matches_sequential_storm_shape(
 
 
 def test_overlap_storm_disk_stays_bounded(rmat14_overlap_storm):
-    """Async saves must not change the retention story: one boundary step,
-    no snapshots (purged through clear_steps, which waits out pending
-    writes), planted junk never restored from."""
+    """Async saves must not change the retention story: at most retain=2
+    boundary steps, no snapshots (purged through clear_steps, which waits
+    out pending writes), planted junk never restored from."""
     ck = rmat14_overlap_storm["ck"]
     steps = sorted(
         d for d in os.listdir(ck)
         if d.startswith("step_") and not d.endswith(".tmp")
     )
-    assert len(steps) == 1
+    assert 1 <= len(steps) <= 2
     sweeps = [
         d for d in os.listdir(_sweep_dir(ck))
         if d.startswith("step_") and not d.endswith(".tmp")
@@ -632,14 +635,15 @@ def test_fused_storm_warm_restarted_midpart(rmat14_runs, rmat14_fused_storm):
 
 
 def test_fused_storm_disk_stays_bounded(rmat14_fused_storm):
-    """Same retention contract as the unfused storms: one boundary step on
-    disk, snapshots purged, planted junk never restored from."""
+    """Same retention contract as the unfused storms: at most retain=2
+    boundary steps on disk, snapshots purged, planted junk never restored
+    from."""
     ck = rmat14_fused_storm["ck"]
     steps = sorted(
         d for d in os.listdir(ck)
         if d.startswith("step_") and not d.endswith(".tmp")
     )
-    assert len(steps) == 1
+    assert 1 <= len(steps) <= 2
     sweeps = [
         d for d in os.listdir(_sweep_dir(ck))
         if d.startswith("step_") and not d.endswith(".tmp")

@@ -348,7 +348,7 @@ def test_thread_mode_boundary_crash_storm(tmp_path):
     assert cycles == len(base_rep.parts)
     steps = [d for d in os.listdir(ck)
              if d.startswith("step_") and not d.endswith(".tmp")]
-    assert len(steps) == 1
+    assert 1 <= len(steps) <= 2  # retain=2: latest boundary + fallback
 
 
 def test_thread_mode_midsweep_crash_resumes(tmp_path):
@@ -512,7 +512,7 @@ np.testing.assert_array_equal(core, base)
 np.testing.assert_array_equal(core, peel_coreness(g))
 assert any(p.resumed_at_sweep > 0 for p in rep.parts)
 steps = [d for d in os.listdir(ck) if d.startswith("step_") and not d.endswith(".tmp")]
-assert len(steps) == 1, steps
+assert 1 <= len(steps) <= 2, steps  # retain=2: latest boundary + fallback
 print("OK")
 """,
         n_devices=N_DEV,

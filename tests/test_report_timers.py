@@ -97,7 +97,10 @@ def test_restore_warns_on_unreadable_snapshot(monkeypatch, caplog, tmp_path):
     def boom(*args, **kwargs):
         raise IOError("truncated payload")
 
-    monkeypatch.setattr(ckpt_mod, "restore_pytree", boom)
+    # restore goes through the CRC-checking fallback path; only a
+    # non-corruption failure (e.g. truncated payload) warns — CRC
+    # mismatches are quarantined inside the fallback itself.
+    monkeypatch.setattr(ckpt_mod, "restore_pytree_with_fallback", boom)
     with caplog.at_level(logging.WARNING, logger="repro.core.dckcore"):
         assert SweepSnapshot.restore(sweep_dir) is None
     assert "unreadable" in caplog.text
@@ -109,7 +112,7 @@ def test_restore_warns_on_format_mismatch(monkeypatch, caplog, tmp_path):
     sweep_dir = str(tmp_path / "sweep")
     monkeypatch.setattr(ckpt_mod, "latest_step", lambda d: 3)
     monkeypatch.setattr(
-        ckpt_mod, "restore_pytree",
+        ckpt_mod, "restore_pytree_with_fallback",
         lambda *a, **k: (
             {"part_coreness": np.zeros(4, np.int32)}, 3, {"format": "bogus"}
         ),
